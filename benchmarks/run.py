@@ -25,11 +25,12 @@ import numpy as np
 
 
 def _timeit(fn, *args, reps=5) -> float:
-    fn(*args)  # compile/warm
+    jax.block_until_ready(fn(*args))  # compile/warm
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        # Block every rep: JAX dispatch is async, so timing only the
+        # final block would measure dispatch cost, not compute.
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
@@ -102,7 +103,6 @@ def bench_gemm_throughput_model(quick: bool) -> list:
 def bench_kernel_pallas(quick: bool) -> list:
     """Pallas kernel (interpret) vs pure-jnp path, same split count."""
     from repro.core import ozaki_matmul
-    from repro.kernels import ops
 
     rng = np.random.default_rng(1)
     n = 128 if quick else 256
@@ -110,12 +110,24 @@ def bench_kernel_pallas(quick: bool) -> list:
     b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     us_jnp = _timeit(
         jax.jit(lambda a, b: ozaki_matmul(a, b, num_splits=6)), a, b)
-    us_pal = _timeit(
-        lambda a, b: ops.ozaki_matmul(a, b, num_splits=6, interpret=True),
-        a, b)
-    return [f"ozaki6_jnp_{n},{us_jnp:.0f},backend=xla_cpu",
-            f"ozaki6_pallas_interpret_{n},{us_pal:.0f},"
-            f"backend=interpret(correctness-only)"]
+    rows = [f"ozaki6_jnp_{n},{us_jnp:.0f},backend=xla_cpu"]
+    try:
+        # Pallas interpret mode has no hardware requirements but can be
+        # unavailable (no pallas in the jaxlib build, Mosaic-only
+        # wheels): skip the row with a reason instead of failing the
+        # whole bench.
+        from repro.kernels import ops
+
+        us_pal = _timeit(
+            lambda a, b: ops.ozaki_matmul(a, b, num_splits=6,
+                                          interpret=True),
+            a, b, reps=2)
+        rows.append(f"ozaki6_pallas_interpret_{n},{us_pal:.0f},"
+                    f"backend=interpret(correctness-only)")
+    except Exception as e:  # noqa: BLE001 - degrade, don't fail
+        rows.append(f"ozaki6_pallas_interpret_{n},0,"
+                    f"skipped={type(e).__name__}")
+    return rows
 
 
 def bench_intercept(quick: bool) -> list:
@@ -142,13 +154,20 @@ def bench_intercept(quick: bool) -> list:
 
 def bench_roofline(quick: bool) -> list:
     """§Roofline summary from the dry-run artifacts (if present)."""
-    from repro.analysis.roofline import analyze_cell
+    try:
+        from repro.analysis.roofline import analyze_cell
+    except Exception as e:  # noqa: BLE001 - degrade, don't fail
+        return [f"roofline_skipped,0,analysis unavailable "
+                f"({type(e).__name__})"]
 
     rows = []
     outdir = Path("runs/dryrun")
     if not outdir.exists():
         return ["roofline_skipped,0,no runs/dryrun artifacts"]
     sel = sorted(outdir.glob("*pod16x16.json"))
+    if not sel:
+        return ["roofline_skipped,0,no *pod16x16.json artifacts in "
+                "runs/dryrun"]
     for j in sel[: 6 if quick else 1000]:
         try:
             r = analyze_cell(j)

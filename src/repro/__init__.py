@@ -1,0 +1,15 @@
+"""repro — tunable precision emulation via automatic BLAS offloading.
+
+JAX/Pallas reproduction of "A Pilot Study on Tunable Precision
+Emulation via Automatic BLAS Offloading" (arXiv:2503.22875).
+
+Package map:
+  * ``repro.core``      — Ozaki INT8 split-GEMM engine, precision
+    policies, and the automatic dot_general interceptor;
+  * ``repro.kernels``   — Pallas TPU kernels (interpret-mode on CPU);
+  * ``repro.apps``      — paper workloads (MuST Green's-function
+    contour study);
+  * ``repro.analysis``  — roofline analysis of dry-run artifacts.
+"""
+
+__version__ = "0.1.0"

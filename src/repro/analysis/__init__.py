@@ -1,0 +1,5 @@
+"""repro.analysis — performance models over dry-run artifacts."""
+
+from . import roofline
+
+__all__ = ["roofline"]

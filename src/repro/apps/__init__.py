@@ -1,0 +1,5 @@
+"""repro.apps — paper workloads driven through the emulation engine."""
+
+from . import must
+
+__all__ = ["must"]

@@ -1,0 +1,33 @@
+"""repro.core — tunable-precision INT8 GEMM emulation.
+
+Layers:
+  * :mod:`repro.core.ozaki`      — the split-GEMM arithmetic engine;
+  * :mod:`repro.core.precision`  — the accuracy knob (policies, split
+    prediction/measurement, adaptive per-site tuning);
+  * :mod:`repro.core.intercept`  — automatic BLAS offload for
+    unmodified JAX functions.
+"""
+
+from .intercept import Site, offload, site_report
+from .ozaki import (SLICE_BITS, num_pair_gemms, ozaki_matmul,
+                    pair_indices, slice_matrix)
+from .precision import (AdaptiveGemm, PrecisionPolicy, SiteState,
+                        estimate_rel_error, measure_splits,
+                        predict_splits)
+
+__all__ = [
+    "SLICE_BITS",
+    "AdaptiveGemm",
+    "PrecisionPolicy",
+    "Site",
+    "SiteState",
+    "estimate_rel_error",
+    "measure_splits",
+    "num_pair_gemms",
+    "offload",
+    "ozaki_matmul",
+    "pair_indices",
+    "predict_splits",
+    "site_report",
+    "slice_matrix",
+]

@@ -1,0 +1,227 @@
+"""Automatic BLAS offload: rewrite ``dot_general`` sites in any JAX fn.
+
+The paper intercepts BLAS calls of an *unmodified* application at the
+linker level and redirects large GEMMs to the INT8 emulation engine.
+The JAX analogue is a jaxpr interpreter: trace the user function,
+walk the resulting jaxpr, and re-emit every qualifying ``dot_general``
+through :func:`repro.core.ozaki.ozaki_matmul` while binding every other
+primitive unchanged.  The user function is never edited — this is the
+"automatic offloading" axis of the paper's title.
+
+Public API
+----------
+
+``offload(fn, policy)``
+    Returns a drop-in replacement for ``fn`` whose large matmuls run
+    emulated.  Composable with ``jax.jit``.
+
+``site_report(fn, policy)``
+    Returns a function that, instead of computing, lists the BLAS-3
+    sites the interceptor would touch (name, shapes, dtype, decision)
+    — the PEAK-profiler "enumerate first, then offload" workflow.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.4.35 exposes the jaxpr IR under jax.extend.core
+    from jax.extend import core as jex_core
+except ImportError:  # pragma: no cover - older jax
+    from jax import core as jex_core
+
+from .ozaki import ozaki_matmul
+from .precision import PrecisionPolicy
+
+__all__ = ["offload", "site_report", "Site"]
+
+# Higher-order primitives whose body jaxpr we descend into so nested
+# dot_generals are rewritten too.  (Control-flow primitives — scan,
+# while, cond — are bound natively for now; their bodies re-enter the
+# interceptor only if the user offloads them separately.)
+_CALL_PRIMITIVES = {"pjit", "closed_call", "custom_jvp_call",
+                    "custom_vjp_call", "remat", "checkpoint"}
+
+
+class Site:
+    """One discovered ``dot_general`` site."""
+
+    def __init__(self, name: str, lhs_shape, rhs_shape, dtype,
+                 offloaded: bool, splits: int, reason: str):
+        self.name = name
+        self.lhs_shape = tuple(lhs_shape)
+        self.rhs_shape = tuple(rhs_shape)
+        self.dtype = jnp.dtype(dtype)
+        self.offloaded = offloaded
+        self.splits = splits
+        self.reason = reason
+
+    def __repr__(self):
+        action = (f"offload fp64_int8_{self.splits}" if self.offloaded
+                  else f"native ({self.reason})")
+        return (f"{self.name}: {self.lhs_shape} @ {self.rhs_shape} "
+                f"{self.dtype.name} -> {action}")
+
+
+def _classify(eqn, policy: PrecisionPolicy, name: str) -> Site:
+    """Decide whether one dot_general equation gets offloaded."""
+    lhs_aval, rhs_aval = (v.aval for v in eqn.invars)
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    dtype = eqn.outvars[0].aval.dtype
+
+    def skip(reason):
+        return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
+                    False, 0, reason)
+
+    if lb or rb:
+        return skip("batched")
+    if lhs_aval.ndim != 2 or rhs_aval.ndim != 2:
+        return skip(f"rank {lhs_aval.ndim}x{rhs_aval.ndim}")
+    if len(lc) != 1 or len(rc) != 1:
+        return skip("multi-dim contraction")
+    if not (jnp.issubdtype(dtype, jnp.floating)
+            or jnp.issubdtype(dtype, jnp.complexfloating)):
+        return skip(f"dtype {jnp.dtype(dtype).name}")
+    m = lhs_aval.shape[1 - lc[0]]
+    k = lhs_aval.shape[lc[0]]
+    n = rhs_aval.shape[1 - rc[0]]
+    if min(m, k, n) < policy.min_dim:
+        return skip(f"min(m,k,n)={min(m, k, n)} < min_dim={policy.min_dim}")
+    return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
+                True, policy.splits_for(name), "")
+
+
+def _emulated_dot(lhs, rhs, eqn, site: Site, policy: PrecisionPolicy):
+    """Re-emit a qualifying dot_general through the Ozaki engine."""
+    (lc, rc), _ = eqn.params["dimension_numbers"]
+    # Normalize to (m, k) @ (k, n): move the contraction axes inward.
+    if lc[0] != 1:
+        lhs = jnp.swapaxes(lhs, 0, 1)
+    if rc[0] != 0:
+        rhs = jnp.swapaxes(rhs, 0, 1)
+    out = ozaki_matmul(lhs, rhs, num_splits=site.splits,
+                       accumulator=policy.accumulator,
+                       out_dtype=eqn.outvars[0].aval.dtype,
+                       slice_bits=policy.slice_bits)
+    return out
+
+
+def _subjaxprs(eqn):
+    """Yield (jaxpr, consts) for the body of a call-like equation."""
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is None:
+            continue
+        if hasattr(sub, "jaxpr"):  # ClosedJaxpr
+            yield sub.jaxpr, sub.consts
+        else:
+            yield sub, []
+        return
+
+
+def _walk_sites(jaxpr, policy: PrecisionPolicy, sites: List[Site],
+                prefix: str) -> None:
+    """Collect dot_general sites without executing anything."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            sites.append(_classify(eqn, policy,
+                                   f"{prefix}dot{len(sites)}"))
+        elif eqn.primitive.name in _CALL_PRIMITIVES:
+            for sub, _ in _subjaxprs(eqn):
+                _walk_sites(sub, policy, sites, prefix)
+
+
+def _eval_jaxpr(jaxpr, consts: Sequence[Any], args: Sequence[Any],
+                policy: PrecisionPolicy, counter: List[int]):
+    """Interpret a jaxpr, swapping qualifying dot_generals for emulation."""
+    env = {}
+
+    def read(v):
+        return v.val if isinstance(v, jex_core.Literal) else env[v]
+
+    def write(v, val):
+        env[v] = val
+
+    for var, const in zip(jaxpr.constvars, consts):
+        write(var, const)
+    for var, arg in zip(jaxpr.invars, args):
+        write(var, arg)
+
+    for eqn in jaxpr.eqns:
+        invals = [read(v) for v in eqn.invars]
+        name = eqn.primitive.name
+        if name == "dot_general":
+            site = _classify(eqn, policy, f"dot{counter[0]}")
+            counter[0] += 1
+            if site.offloaded:
+                outvals = [_emulated_dot(invals[0], invals[1], eqn,
+                                         site, policy)]
+            else:
+                outvals = [eqn.primitive.bind(*invals, **eqn.params)]
+        elif name in _CALL_PRIMITIVES:
+            handled = False
+            for sub, sub_consts in _subjaxprs(eqn):
+                outvals = _eval_jaxpr(sub, sub_consts, invals, policy,
+                                      counter)
+                handled = True
+            if not handled:  # no body found — bind natively
+                outvals = eqn.primitive.bind(*invals, **eqn.params)
+                if not eqn.primitive.multiple_results:
+                    outvals = [outvals]
+        else:
+            outvals = eqn.primitive.bind(*invals, **eqn.params)
+            if not eqn.primitive.multiple_results:
+                outvals = [outvals]
+        for var, val in zip(eqn.outvars, outvals):
+            write(var, val)
+
+    return [read(v) for v in jaxpr.outvars]
+
+
+def offload(fn, policy: PrecisionPolicy | None = None):
+    """Wrap ``fn`` so its large matmuls run INT8-emulated.
+
+    ``fn`` is traced with ``jax.make_jaxpr`` on each call (cheap, and
+    cached by XLA once jitted); every ``dot_general`` whose operand
+    dimensions all reach ``policy.min_dim`` is rewritten through
+    :func:`ozaki_matmul` with the policy's split count.  All other
+    primitives — including ones inside nested ``pjit``/``custom_jvp``
+    bodies — execute unchanged.
+
+    The wrapper is itself traceable: ``jax.jit(offload(fn, policy))``
+    compiles the rewritten computation.
+    """
+    policy = policy or PrecisionPolicy()
+
+    def wrapped(*args, **kwargs):
+        closed, out_shape = jax.make_jaxpr(
+            fn, return_shape=True)(*args, **kwargs)
+        flat_args = jax.tree_util.tree_leaves((args, kwargs))
+        flat_out = _eval_jaxpr(closed.jaxpr, closed.consts, flat_args,
+                               policy, counter=[0])
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        return jax.tree_util.tree_unflatten(out_tree, flat_out)
+
+    wrapped.__name__ = f"offload({getattr(fn, '__name__', 'fn')})"
+    return wrapped
+
+
+def site_report(fn, policy: PrecisionPolicy | None = None):
+    """Enumerate the BLAS-3 sites ``offload`` would rewrite in ``fn``.
+
+    Returns a function with the same signature as ``fn`` that returns a
+    list of :class:`Site` records instead of computing.
+    """
+    policy = policy or PrecisionPolicy()
+
+    def reporter(*args, **kwargs) -> List[Site]:
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        sites: List[Site] = []
+        _walk_sites(closed.jaxpr, policy, sites, prefix="")
+        return sites
+
+    reporter.__name__ = f"site_report({getattr(fn, '__name__', 'fn')})"
+    return reporter

@@ -1,0 +1,239 @@
+"""Ozaki-scheme INT8 split-GEMM emulation of high-precision matmuls.
+
+The Ozaki scheme writes a floating-point matrix as an exact sum of
+narrow integer "slices"
+
+    A / sigma_A  =  sum_t  S_t * 2**(-w*(t+1)),      S_t in int8,
+
+where ``sigma_A`` is a per-row power-of-two scale and ``w`` is the slice
+width in bits.  Products of slices are then exact in INT8xINT8->INT32
+arithmetic (the datatype tensor cores / the TPU MXU natively consume),
+and the high-precision product is recovered by accumulating the pair
+products ``S_i(A) @ S_j(B)`` with the appropriate power-of-two weights.
+
+With ``s`` slices per operand we follow the standard truncated scheme
+and keep only the pairs with ``i + j < s`` — ``s*(s+1)/2`` GEMMs — so
+the split count tunes accuracy continuously: each extra split buys
+roughly ``w`` more mantissa bits.
+
+Two accumulators are provided:
+
+* ``"f64"``   — accumulate the scaled INT32 pair products in float64
+  (what ozIMMU does on CUDA hardware with FP64 units);
+* ``"df32"``  — "double-float32": every INT32 pair product is split
+  exactly into a hi/lo pair of float32 values and the weighted sum is
+  carried with compensated (TwoSum) float32 arithmetic, giving ~48
+  effective mantissa bits without touching an FP64 unit.  This is the
+  accumulator of interest for FP64-free accelerators (TPU v5e).
+
+Complex inputs are handled by four real split-GEMMs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SLICE_BITS",
+    "num_pair_gemms",
+    "pair_indices",
+    "slice_matrix",
+    "ozaki_matmul",
+]
+
+# Bits of mantissa carried per int8 slice.  Slice values live in
+# [-2**(SLICE_BITS-1), 2**(SLICE_BITS-1)] so an int8 comfortably holds
+# them and k-long INT32 dot products cannot overflow for any practical
+# k (|q_a*q_b| <= 2**(2w-2); k < 2**(33-2w)).  Six bits per slice keeps
+# the s=3..9 accuracy ladder strictly monotone before hitting the f64
+# reference floor, mirroring the paper's Table 1 trend.
+SLICE_BITS = 6
+
+
+def num_pair_gemms(num_splits: int) -> int:
+    """Number of INT8 GEMMs issued for a given split count."""
+    return num_splits * (num_splits + 1) // 2
+
+
+def pair_indices(num_splits: int) -> tuple[np.ndarray, np.ndarray]:
+    """Slice-index pairs (i, j) with i + j < num_splits, by ascending i+j.
+
+    Ordering by total shift means the compensated accumulation adds
+    terms from largest to smallest magnitude.
+    """
+    pairs = [(i, j) for i in range(num_splits) for j in range(num_splits)
+             if i + j < num_splits]
+    pairs.sort(key=lambda ij: (ij[0] + ij[1], ij[0]))
+    ii = np.array([p[0] for p in pairs], dtype=np.int32)
+    jj = np.array([p[1] for p in pairs], dtype=np.int32)
+    return ii, jj
+
+
+def _pow2_scale(x: jax.Array, axis: int) -> jax.Array:
+    """Per-row/col power-of-two scale sigma with |x| / sigma <= 1/2."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    # exponent e with 2**e >= 2*absmax; zero rows get sigma = 1.
+    # NB: jnp.exp2 is approximate on some backends, ldexp is exact.
+    e = jnp.where(absmax > 0, jnp.ceil(jnp.log2(absmax)) + 1.0, 0.0)
+    return jnp.ldexp(jnp.ones_like(absmax), e.astype(jnp.int32))
+
+
+def slice_matrix(x: jax.Array, num_splits: int, axis: int,
+                 slice_bits: int = SLICE_BITS):
+    """Split ``x`` into int8 slices along its value (mantissa) axis.
+
+    Returns ``(slices, sigma)`` with ``slices`` of shape
+    ``(num_splits, *x.shape)`` (int8) and ``sigma`` the per-row (axis=1)
+    or per-column (axis=0) power-of-two scale, such that
+
+        x ~= sigma * sum_t slices[t] * 2**(-slice_bits*(t+1)).
+
+    The remainder after ``num_splits`` slices is < 2**(-w*s - 1) per
+    element (relative to sigma): the splitting itself is exact in f64
+    arithmetic, only the truncation to ``num_splits`` slices loses bits.
+    """
+    compute_dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    x = x.astype(compute_dtype)
+    sigma = _pow2_scale(x, axis=axis)
+    r = x / sigma  # |r| <= 0.5, scaling by a power of two is exact
+    radix = float(2 ** slice_bits)
+    out = []
+    for _ in range(num_splits):
+        q = jnp.round(r * radix)  # |q| <= 2**(slice_bits-1) after step 1
+        out.append(q.astype(jnp.int8))
+        r = r * radix - q  # exact: both operands share an exponent window
+    return jnp.stack(out), jnp.squeeze(sigma, axis=axis)
+
+
+def _int8_pair_products(a_sl, b_sl, ii, jj):
+    """Batched INT8 GEMMs over the selected slice pairs -> int32 (p,m,n)."""
+    a_p = jnp.take(a_sl, jnp.asarray(ii), axis=0)  # (p, m, k) int8
+    b_p = jnp.take(b_sl, jnp.asarray(jj), axis=0)  # (p, k, n) int8
+    return jax.lax.dot_general(
+        a_p, b_p,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+
+
+def _accumulate_f64(prod, shifts, slice_bits):
+    """Weighted float64 accumulation of the INT32 pair products."""
+    # shifts is a static numpy array: build exact power-of-two weights
+    # host-side (jnp.exp2 is NOT exact for integer args on XLA CPU).
+    w = np.ldexp(1.0, -(np.asarray(shifts) + 2) * slice_bits)
+    return jnp.einsum("p,pmn->mn", jnp.asarray(w, jnp.float64),
+                      prod.astype(jnp.float64))
+
+
+def _two_sum(acc, term):
+    """Knuth TwoSum: acc + term = s + err exactly (any float dtype)."""
+    s = acc + term
+    bp = s - acc
+    err = (acc - (s - bp)) + (term - bp)
+    return s, err
+
+
+def _accumulate_df32(prod, shifts, slice_bits, num_splits):
+    """Compensated double-float32 accumulation.
+
+    Each INT32 pair product is split exactly into hi/lo float32 parts,
+    weighted by a *non-negative* power-of-two shift (so the weighting is
+    exact in f32 and never underflows), and folded into a compensated
+    (sum, err) float32 pair.  The caller divides by the deferred scale
+    2**(w*(s+1)) at combine time.
+    """
+    smax = num_splits - 1
+    hi = prod.astype(jnp.float32)
+    lo = (prod - hi.astype(jnp.int64)).astype(jnp.float32)
+    # Positive shifts: pair (i, j) gets weight 2**(w*(smax - i - j)).
+    # Exact host-side powers of two (jnp.exp2 is approximate on CPU).
+    w = np.ldexp(np.float32(1.0), (smax - np.asarray(shifts)) * slice_bits)
+    w = jnp.asarray(w, jnp.float32)[:, None, None]
+    t_hi = hi * w  # exact: power-of-two weight, well inside f32 range
+    t_lo = lo * w
+    acc = jnp.zeros(prod.shape[1:], jnp.float32)
+    comp = jnp.zeros(prod.shape[1:], jnp.float32)
+    for p in range(prod.shape[0]):  # pairs ordered large -> small
+        acc, err = _two_sum(acc, t_hi[p])
+        comp = comp + err
+        acc, err = _two_sum(acc, t_lo[p])
+        comp = comp + err
+    deferred = 2.0 ** (-slice_bits * (smax + 2))
+    return acc, comp, deferred
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "accumulator",
+                                             "out_dtype", "slice_bits"))
+def _real_ozaki(a, b, num_splits, accumulator, out_dtype, slice_bits):
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    a_sl, sigma_a = slice_matrix(a, num_splits, axis=1,
+                                 slice_bits=slice_bits)
+    b_sl, sigma_b = slice_matrix(b, num_splits, axis=0,
+                                 slice_bits=slice_bits)
+    ii, jj = pair_indices(num_splits)
+    prod = _int8_pair_products(a_sl, b_sl, ii, jj)
+    shifts = ii + jj
+    if accumulator == "f64":
+        c = _accumulate_f64(prod, shifts, slice_bits)
+        c = c.astype(out_dtype)
+    elif accumulator == "df32":
+        acc, comp, deferred = _accumulate_df32(prod, shifts, slice_bits,
+                                               num_splits)
+        c = (acc.astype(out_dtype) + comp.astype(out_dtype)) * deferred
+    else:
+        raise ValueError(f"unknown accumulator {accumulator!r};"
+                         " expected 'df32' or 'f64'")
+    scale = (sigma_a[:, None] * sigma_b[None, :]).astype(out_dtype)
+    return c * scale
+
+
+def ozaki_matmul(a, b, num_splits: int = 6, accumulator: str = "df32",
+                 out_dtype=None, slice_bits: int = SLICE_BITS):
+    """Emulated high-precision matmul ``a @ b`` via INT8 split GEMMs.
+
+    Args:
+      a: (m, k) real or complex floating array.
+      b: (k, n) real or complex floating array.
+      num_splits: slice count ``s``; issues ``s*(s+1)/2`` INT8 GEMMs and
+        carries roughly ``slice_bits * s`` mantissa bits.
+      accumulator: ``"df32"`` (compensated float32 pairs, FP64-free) or
+        ``"f64"`` (plain float64 accumulation).
+      out_dtype: result dtype; defaults to the common input dtype.
+      slice_bits: mantissa bits per int8 slice.
+
+    Returns:
+      (m, n) array of ``out_dtype``.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("ozaki_matmul expects 2-D operands, got "
+                         f"{a.shape} @ {b.shape}")
+    if num_splits < 1:
+        raise ValueError(f"num_splits must be >= 1, got {num_splits}")
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    out_dtype = jnp.dtype(out_dtype)
+
+    if jnp.issubdtype(a.dtype, jnp.complexfloating) or \
+       jnp.issubdtype(b.dtype, jnp.complexfloating) or \
+       jnp.issubdtype(out_dtype, jnp.complexfloating):
+        real_out = jnp.float64 if out_dtype == jnp.complex128 \
+            else jnp.float32
+        part = functools.partial(
+            _real_ozaki, num_splits=num_splits, accumulator=accumulator,
+            out_dtype=real_out, slice_bits=slice_bits)
+        ar, ai = jnp.real(a), jnp.imag(a)
+        br, bi = jnp.real(b), jnp.imag(b)
+        cr = part(ar, br) - part(ai, bi)
+        ci = part(ar, bi) + part(ai, br)
+        return jax.lax.complex(cr, ci).astype(out_dtype)
+
+    return _real_ozaki(a, b, num_splits, accumulator, out_dtype,
+                       slice_bits)

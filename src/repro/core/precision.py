@@ -1,0 +1,179 @@
+"""Tunable-precision policy layer: pick the split count for a tolerance.
+
+The paper's central observation is that emulation accuracy is a *knob*:
+the split count trades INT8 GEMM volume (``s*(s+1)/2`` products) for
+mantissa bits (roughly ``SLICE_BITS * s``).  This module provides the
+three ways to turn that knob:
+
+* :func:`predict_splits`   — a priori, from the error model;
+* :func:`measure_splits`   — empirically, by probing the actual operands;
+* :class:`AdaptiveGemm`    — stateful per-call-site tuning, the
+  "adaptive precision strategies" the paper advocates for.
+
+plus :class:`PrecisionPolicy`, the configuration record consumed by the
+automatic-offload interceptor (:mod:`repro.core.intercept`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ozaki import SLICE_BITS, ozaki_matmul
+
+__all__ = [
+    "PrecisionPolicy",
+    "SiteState",
+    "AdaptiveGemm",
+    "predict_splits",
+    "measure_splits",
+    "estimate_rel_error",
+]
+
+#: Hard ceiling on the split count: beyond this the slices cover more
+#: mantissa than an f64 input carries and extra splits cannot help.
+MAX_SPLITS = 14
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """How the interceptor treats discovered BLAS-3 sites.
+
+    Attributes:
+      default_splits: split count for sites without an override.
+      min_dim: only offload a ``dot_general`` whose m, k and n are all
+        at least this large; smaller GEMMs stay native (emulation
+        overhead cannot amortize, mirroring the paper's size cutoff
+        in the offloading tool).
+      accumulator: ``"df32"`` or ``"f64"`` (see
+        :func:`repro.core.ozaki.ozaki_matmul`).
+      slice_bits: mantissa bits per int8 slice.
+      site_splits: per-site split-count overrides, keyed by the site
+        names reported by :func:`repro.core.intercept.site_report`.
+    """
+
+    default_splits: int = 6
+    min_dim: int = 128
+    accumulator: str = "df32"
+    slice_bits: int = SLICE_BITS
+    site_splits: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def splits_for(self, site: str) -> int:
+        return self.site_splits.get(site, self.default_splits)
+
+
+def estimate_rel_error(num_splits: int, k: int,
+                       slice_bits: int = SLICE_BITS) -> float:
+    """A-priori bound on max |C_emul - C| / (|A| @ |B|).
+
+    After ``s`` slices the per-element truncation of the scaled operand
+    is below ``2**(-w*s)``; the dropped cross terms (i + j >= s) are of
+    the same order, and the k-fold accumulation contributes a modest
+    O(sqrt(k)) growth for zero-mean data.  The constant is calibrated
+    against the Gaussian sweeps in the quickstart (it intentionally
+    over-estimates: predict_splits should err toward accuracy).
+    """
+    return 4.0 * math.sqrt(k) * 2.0 ** (-slice_bits * num_splits)
+
+
+def predict_splits(a, b, target_rel: float,
+                   slice_bits: int = SLICE_BITS) -> int:
+    """Smallest split count whose modeled error meets ``target_rel``."""
+    k = a.shape[-1]
+    for s in range(1, MAX_SPLITS + 1):
+        if estimate_rel_error(s, k, slice_bits) <= target_rel:
+            return s
+    return MAX_SPLITS
+
+
+def measure_splits(a, b, target_rel: float, accumulator: str = "df32",
+                   slice_bits: int = SLICE_BITS,
+                   start: Optional[int] = None):
+    """Empirical split selection against the actual operands.
+
+    Runs the emulated GEMM with increasing split counts until its max
+    relative error (vs. the native high-precision product, normalized
+    by ``|A| @ |B|``) meets ``target_rel``.
+
+    Returns:
+      ``(num_splits, achieved_rel_error)``.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    # Probe in the widest available precision regardless of the input
+    # dtype: a float32 reference would floor the measurable error at
+    # ~1e-6 and make tighter targets silently unreachable.
+    ref_dtype = (jnp.complex128 if jnp.iscomplexobj(a)
+                 or jnp.iscomplexobj(b) else jnp.float64)
+    if not jax.config.jax_enable_x64:
+        ref_dtype = jnp.complex64 if ref_dtype == jnp.complex128 \
+            else jnp.float32
+    ref = jnp.matmul(a.astype(ref_dtype), b.astype(ref_dtype))
+    denom = jnp.abs(jnp.matmul(jnp.abs(a).astype(ref_dtype),
+                               jnp.abs(b).astype(ref_dtype)))
+    denom = jnp.where(denom == 0, 1.0, denom)
+    s0 = start if start is not None else max(
+        1, predict_splits(a, b, target_rel, slice_bits) - 2)
+    err = float("inf")
+    for s in range(s0, MAX_SPLITS + 1):
+        c = ozaki_matmul(a, b, num_splits=s, accumulator=accumulator,
+                         out_dtype=ref_dtype, slice_bits=slice_bits)
+        err = float(jnp.max(jnp.abs(c - ref) / denom))
+        if err <= target_rel:
+            return s, err
+    return MAX_SPLITS, err
+
+
+@dataclasses.dataclass
+class SiteState:
+    """Per-call-site tuning record kept by :class:`AdaptiveGemm`."""
+
+    splits: int
+    err_estimate: float
+    calls: int = 0
+
+
+class AdaptiveGemm:
+    """Stateful emulated GEMM that tunes its split count per site.
+
+    The first call for a given ``site`` measures the split count needed
+    to hit ``target_rel`` on those operands and caches it; subsequent
+    calls reuse the cached count.  This is the dynamic-precision
+    execution mode the paper proposes for operators whose conditioning
+    varies across call sites (e.g. the Green's-function poles near the
+    Fermi energy in MuST).
+    """
+
+    def __init__(self, target_rel: float = 1e-9,
+                 accumulator: str = "df32",
+                 slice_bits: int = SLICE_BITS):
+        self.target_rel = float(target_rel)
+        self.accumulator = accumulator
+        self.slice_bits = slice_bits
+        self.sites: Dict[str, SiteState] = {}
+
+    def __call__(self, a, b, site: str = "default", out_dtype=None):
+        state = self.sites.get(site)
+        if state is None:
+            s, err = measure_splits(a, b, self.target_rel,
+                                    accumulator=self.accumulator,
+                                    slice_bits=self.slice_bits)
+            state = SiteState(splits=s, err_estimate=err)
+            self.sites[site] = state
+        state.calls += 1
+        return ozaki_matmul(a, b, num_splits=state.splits,
+                            accumulator=self.accumulator,
+                            out_dtype=out_dtype,
+                            slice_bits=self.slice_bits)
+
+    def report(self) -> str:
+        lines = [f"AdaptiveGemm(target_rel={self.target_rel:.1e})"]
+        for name, st in sorted(self.sites.items()):
+            lines.append(f"  site {name!r}: s={st.splits} "
+                         f"(err~{st.err_estimate:.2e}, {st.calls} calls)")
+        return "\n".join(lines)

@@ -1,0 +1,5 @@
+"""repro.kernels — Pallas kernels for the emulation engine."""
+
+from . import ops
+
+__all__ = ["ops"]

@@ -1,0 +1,173 @@
+"""Pallas tiled Ozaki split-GEMM kernel.
+
+One fused kernel computes the whole emulated GEMM: the grid walks
+``(m-tiles, n-tiles, slice-pairs, k-tiles)`` and every step issues one
+INT8xINT8->INT32 tile product on the MXU, weights it by the pair's
+power-of-two shift, and folds it into a compensated float32 accumulator
+held in VMEM scratch (TwoSum, so the ~48-bit "df32" accuracy of the
+reference path survives the single-f32 output constraint of FP64-free
+hardware).  The kernel emits separate hi/lo f32 outputs; the wrapper
+combines them in the requested output dtype.
+
+Slicing (mantissa decomposition) happens outside the kernel with the
+same helpers as :mod:`repro.core.ozaki`, so both paths are bit-for-bit
+comparable in tests.
+
+On CPU there is no Mosaic backend: pass ``interpret=True`` (the
+benchmarks do) to run the kernel through the Pallas interpreter —
+correctness-only, but it exercises the exact same kernel body that
+compiles for TPU.
+
+TPU notes: int8 operands want (32, 128) min tiles; the default 128
+tile sizes below satisfy MXU alignment for all dtypes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.ozaki import (SLICE_BITS, _two_sum, pair_indices,
+                              slice_matrix)
+
+__all__ = ["ozaki_matmul", "split_gemm_pallas"]
+
+
+def _split_gemm_kernel(a_ref, b_ref, w_ref, hi_ref, lo_ref):
+    """Grid: (m/bm, n/bn, num_pairs, k/bk). One INT8 tile product.
+
+    The output tiles are revisited across the two reduction grid dims
+    (pair index, k-tile) and double as the compensated accumulator:
+    ``hi`` carries the running TwoSum, ``lo`` the accumulated error.
+    """
+    p = pl.program_id(2)
+    kt = pl.program_id(3)
+    first = jnp.logical_and(p == 0, kt == 0)
+
+    @pl.when(first)
+    def _():
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+
+    part = jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    # Power-of-two pair weight: the product is exact in f32 because the
+    # int32 partial fits f32's mantissa for k-tiles <= 2**(24-2w+2).
+    term = part.astype(jnp.float32) * w_ref[0]
+
+    # Same compensated accumulation as the jnp df32 reference path —
+    # shared TwoSum keeps the two paths bit-identical by construction.
+    s, err = _two_sum(hi_ref[...], term)
+    hi_ref[...] = s
+    lo_ref[...] = lo_ref[...] + err
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_splits", "slice_bits", "block_m", "block_n", "block_k",
+    "interpret"))
+def split_gemm_pallas(a_sl, b_sl, num_splits: int,
+                      slice_bits: int = SLICE_BITS,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = False):
+    """Run the fused pair-product kernel over pre-sliced operands.
+
+    Args:
+      a_sl: (s, m, k) int8 slices of A.
+      b_sl: (s, k, n) int8 slices of B.
+
+    Returns:
+      (hi, lo) float32 arrays of shape (m, n); the emulated scaled
+      product is ``(hi + lo) * 2**(-slice_bits*(num_splits+1))`` (the
+      deferred shift keeps all in-kernel weights >= 1 so they stay
+      exact in f32).
+    """
+    _, m, k = a_sl.shape
+    _, _, n = b_sl.shape
+    ii, jj = pair_indices(num_splits)
+    smax = num_splits - 1
+    a_pairs = jnp.take(a_sl, jnp.asarray(ii), axis=0)
+    b_pairs = jnp.take(b_sl, jnp.asarray(jj), axis=0)
+    weights = jnp.asarray(
+        np.ldexp(np.float32(1.0), (smax - (ii + jj)) * slice_bits))
+
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    a_pairs = _pad_to(_pad_to(a_pairs, bm, 1), bk, 2)
+    b_pairs = _pad_to(_pad_to(b_pairs, bk, 1), bn, 2)
+    mp, kp = a_pairs.shape[1:]
+    np_ = b_pairs.shape[2]
+    num_pairs = len(ii)
+    grid = (mp // bm, np_ // bn, num_pairs, kp // bk)
+
+    hi, lo = pl.pallas_call(
+        _split_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, j, p, kt: (p, i, kt)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, p, kt: (p, kt, j)),
+            pl.BlockSpec((1,), lambda i, j, p, kt: (p,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, p, kt: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, p, kt: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_pairs, b_pairs, weights)
+    return hi[:m, :n], lo[:m, :n]
+
+
+def ozaki_matmul(a, b, num_splits: int = 6, accumulator: str = "df32",
+                 out_dtype=None, slice_bits: int = SLICE_BITS,
+                 interpret: bool = False, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128):
+    """Pallas-backed drop-in for :func:`repro.core.ozaki.ozaki_matmul`.
+
+    Same signature and semantics as the jnp reference path, plus
+    ``interpret`` (run through the Pallas interpreter — required on
+    CPU) and tile-size overrides.  The kernel's compensated-f32
+    accumulation corresponds to the reference ``"df32"`` accumulator;
+    ``accumulator`` is accepted for signature parity.
+    """
+    del accumulator  # kernel always accumulates compensated-f32
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("ozaki_matmul expects 2-D operands, got "
+                         f"{a.shape} @ {b.shape}")
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    out_dtype = jnp.dtype(out_dtype)
+    if jnp.issubdtype(out_dtype, jnp.complexfloating):
+        raise NotImplementedError(
+            "complex operands: route through repro.core.ozaki_matmul")
+
+    a_sl, sigma_a = slice_matrix(a, num_splits, axis=1,
+                                 slice_bits=slice_bits)
+    b_sl, sigma_b = slice_matrix(b, num_splits, axis=0,
+                                 slice_bits=slice_bits)
+    hi, lo = split_gemm_pallas(a_sl, b_sl, num_splits,
+                               slice_bits=slice_bits, block_m=block_m,
+                               block_n=block_n, block_k=block_k,
+                               interpret=interpret)
+    deferred = 2.0 ** (-slice_bits * (num_splits + 1))
+    c = (hi.astype(out_dtype) + lo.astype(out_dtype)) * deferred
+    scale = (sigma_a[:, None] * sigma_b[None, :]).astype(out_dtype)
+    return c * scale

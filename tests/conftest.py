@@ -1,0 +1,12 @@
+"""Test bootstrap: src/ on the path, float64 enabled globally."""
+
+import pathlib
+import sys
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,97 @@
+"""Split selection: error model, empirical probe, per-site adaptivity."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdaptiveGemm, estimate_rel_error, measure_splits,
+                        ozaki_matmul, predict_splits)
+
+
+def _gauss(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, n)))
+
+
+class TestPredict:
+    def test_monotone_in_tolerance(self):
+        a, b = _gauss(256, 0), _gauss(256, 1)
+        splits = [predict_splits(a, b, tol)
+                  for tol in (1e-2, 1e-6, 1e-10, 1e-14)]
+        assert splits == sorted(splits)
+        assert splits[0] < splits[-1]
+
+    def test_model_is_conservative(self):
+        # The a-priori bound must dominate the observed Gaussian error.
+        a, b = _gauss(256, 2), _gauss(256, 3)
+        ref = a @ b
+        denom = jnp.abs(a) @ jnp.abs(b)
+        for s in (3, 5, 7):
+            c = ozaki_matmul(a, b, num_splits=s, accumulator="f64",
+                             out_dtype=jnp.float64)
+            err = float(jnp.max(jnp.abs(c - ref) / denom))
+            assert err <= estimate_rel_error(s, 256)
+
+
+class TestMeasure:
+    def test_achieves_tolerance(self):
+        a, b = _gauss(192, 4), _gauss(192, 5)
+        for tol in (1e-4, 1e-8, 1e-12):
+            s, err = measure_splits(a, b, tol)
+            assert err <= tol
+            # and s is minimal: one fewer split must miss the target
+            if s > 1:
+                _, err_less = measure_splits(a, b, tol, start=s - 1)
+                ref = a @ b
+                denom = jnp.abs(a) @ jnp.abs(b)
+                c = ozaki_matmul(a, b, num_splits=s - 1,
+                                 out_dtype=jnp.float64)
+                assert float(jnp.max(jnp.abs(c - ref) / denom)) > tol
+
+    def test_f32_operands_probe_below_f32_floor(self):
+        # The probe must upcast its reference: with a float32 reference
+        # a 1e-9 target would be unreachable and the search would burn
+        # to MAX_SPLITS.
+        rng = np.random.default_rng(20)
+        a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        s, err = measure_splits(a, b, 1e-9)
+        assert err <= 1e-9
+        assert s <= 8
+
+    def test_measured_at_most_predicted(self):
+        # predict errs conservative, so the empirical pick can only be
+        # at or below it.
+        a, b = _gauss(160, 6), _gauss(160, 7)
+        tol = 1e-9
+        assert measure_splits(a, b, tol)[0] <= predict_splits(a, b, tol)
+
+
+class TestAdaptiveGemm:
+    def test_site_state_cached_and_honors_tolerance(self):
+        gemm = AdaptiveGemm(target_rel=1e-9)
+        a, b = _gauss(128, 8), _gauss(128, 9)
+        c1 = gemm(a, b, site="tau")
+        state = gemm.sites["tau"]
+        assert state.err_estimate <= 1e-9
+        assert state.calls == 1
+        gemm(a, b, site="tau")
+        assert gemm.sites["tau"].calls == 2
+        assert gemm.sites["tau"].splits == state.splits  # no re-probe
+        ref = a @ b
+        denom = jnp.abs(a) @ jnp.abs(b)
+        assert float(jnp.max(jnp.abs(c1 - ref) / denom)) <= 1e-9
+
+    def test_looser_site_uses_fewer_splits(self):
+        a, b = _gauss(128, 10), _gauss(128, 11)
+        tight = AdaptiveGemm(target_rel=1e-12)
+        loose = AdaptiveGemm(target_rel=1e-3)
+        tight(a, b, site="x")
+        loose(a, b, site="x")
+        assert loose.sites["x"].splits < tight.sites["x"].splits
+
+    def test_report_lists_sites(self):
+        gemm = AdaptiveGemm(target_rel=1e-6)
+        a, b = _gauss(96, 12), _gauss(96, 13)
+        gemm(a, b, site="alpha")
+        text = gemm.report()
+        assert "alpha" in text and "s=" in text

@@ -1,0 +1,110 @@
+"""Automatic offload: site discovery and numerical agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PrecisionPolicy, offload, site_report
+
+
+def _solver(a, b):
+    x = jnp.tanh(a @ b)
+    for _ in range(2):
+        x = x @ b / jnp.linalg.norm(x)
+    return jnp.sum(x)
+
+
+@pytest.fixture(scope="module")
+def operands():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((192, 192)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((192, 192)), jnp.float32)
+    return a, b
+
+
+class TestSiteReport:
+    def test_discovers_all_matmuls(self, operands):
+        a, b = operands
+        sites = site_report(_solver, PrecisionPolicy(min_dim=128))(a, b)
+        assert len(sites) == 3
+        assert all(s.offloaded for s in sites)
+        assert [s.name for s in sites] == ["dot0", "dot1", "dot2"]
+        assert sites[0].lhs_shape == (192, 192)
+
+    def test_min_dim_gates_sites(self, operands):
+        a, b = operands
+        sites = site_report(_solver, PrecisionPolicy(min_dim=256))(a, b)
+        assert all(not s.offloaded for s in sites)
+        assert "min_dim" in sites[0].reason
+
+    def test_small_dims_reported_not_offloaded(self):
+        def f(a, b):
+            return (a @ b) @ b.T  # k=8 below any sane min_dim
+
+        a = jnp.ones((256, 8))
+        b = jnp.ones((8, 256))
+        sites = site_report(f, PrecisionPolicy(min_dim=64))(a, b)
+        assert [s.offloaded for s in sites] == [False, False]
+
+    def test_site_splits_override(self, operands):
+        a, b = operands
+        pol = PrecisionPolicy(default_splits=4, min_dim=64,
+                              site_splits={"dot1": 9})
+        sites = site_report(_solver, pol)(a, b)
+        assert [s.splits for s in sites] == [4, 9, 4]
+
+
+class TestOffloadNumerics:
+    def test_agrees_with_native(self, operands):
+        a, b = operands
+        pol = PrecisionPolicy(default_splits=7, min_dim=128)
+        ref = float(_solver(a, b))
+        got = float(offload(_solver, pol)(a, b))
+        assert abs(got - ref) / abs(ref) < 1e-5
+
+    def test_composes_with_jit(self, operands):
+        a, b = operands
+        pol = PrecisionPolicy(default_splits=6, min_dim=128)
+        eager = offload(_solver, pol)(a, b)
+        jitted = jax.jit(offload(_solver, pol))(a, b)
+        np.testing.assert_allclose(np.asarray(jitted),
+                                   np.asarray(eager), rtol=1e-6)
+
+    def test_gated_function_is_bit_identical(self, operands):
+        # min_dim above every site => the interpreter must reproduce
+        # the native computation exactly (same primitives, same order).
+        a, b = operands
+        pol = PrecisionPolicy(min_dim=4096)
+        ref = _solver(a, b)
+        got = offload(_solver, pol)(a, b)
+        assert float(ref) == float(got)
+
+    def test_pytree_outputs_and_kwargs(self):
+        def f(a, scale=2.0):
+            return {"y": (a @ a) * scale, "trace": jnp.trace(a)}
+
+        a = jnp.asarray(np.random.default_rng(1)
+                        .standard_normal((160, 160)), jnp.float32)
+        pol = PrecisionPolicy(default_splits=7, min_dim=64)
+        ref = f(a, scale=3.0)
+        got = offload(f, pol)(a, scale=3.0)
+        assert set(got) == {"y", "trace"}
+        np.testing.assert_allclose(np.asarray(got["y"]),
+                                   np.asarray(ref["y"]), rtol=1e-4,
+                                   atol=1e-3)
+        assert float(got["trace"]) == float(ref["trace"])
+
+    def test_transposed_contraction(self):
+        def f(a, b):
+            return jax.lax.dot_general(
+                a, b, dimension_numbers=(((0,), (1,)), ((), ())))
+
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.standard_normal((128, 96)))
+        b = jnp.asarray(rng.standard_normal((144, 128)))
+        pol = PrecisionPolicy(default_splits=9, min_dim=64,
+                              accumulator="f64")
+        ref = np.asarray(f(a, b))
+        got = np.asarray(offload(f, pol)(a, b))
+        np.testing.assert_allclose(got, ref, rtol=1e-10, atol=1e-10)

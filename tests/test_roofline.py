@@ -1,0 +1,65 @@
+"""Roofline model over dry-run artifacts."""
+
+import json
+
+import pytest
+
+from repro.analysis.roofline import V5E_PEAKS, CellAnalysis, analyze_cell
+
+
+def _artifact(**kw):
+    base = {"cell": "must_n4096_pod16x16", "num_devices": 256,
+            "flops": 1.0e15, "int8_flops": 8.0e14,
+            "hbm_bytes": 2.0e12, "collective_bytes": 1.0e10}
+    base.update(kw)
+    return base
+
+
+class TestAnalyzeCell:
+    def test_from_dict(self):
+        r = analyze_cell(_artifact())
+        assert isinstance(r, CellAnalysis)
+        assert r.cell == "must_n4096_pod16x16"
+        expected_compute = (0.2e15 / V5E_PEAKS["flops"]
+                            + 0.8e15 / V5E_PEAKS["int8_flops"]) / 256
+        assert r.compute_s == pytest.approx(expected_compute)
+        assert r.dominant in ("compute", "memory", "collective")
+        assert r.bound_s == max(r.compute_s, r.memory_s, r.collective_s)
+
+    def test_from_json_file(self, tmp_path):
+        p = tmp_path / "must_n4096_pod16x16.json"
+        p.write_text(json.dumps(_artifact()))
+        r = analyze_cell(p)
+        assert r.num_devices == 256
+        assert r.memory_s == pytest.approx(
+            2.0e12 / V5E_PEAKS["hbm_gbps"] / 256)
+
+    def test_cell_defaults_to_filename(self, tmp_path):
+        p = tmp_path / "decode_32k_pod16x16.json"
+        art = _artifact()
+        del art["cell"]
+        p.write_text(json.dumps(art))
+        assert analyze_cell(p).cell == "decode_32k_pod16x16"
+
+    def test_memory_bound_cell(self):
+        r = analyze_cell(_artifact(flops=1e12, int8_flops=0,
+                                   hbm_bytes=5e14))
+        assert r.dominant == "memory"
+
+    def test_peak_overrides(self):
+        r = analyze_cell(_artifact(
+            int8_flops=0, peaks={"flops": 1.0e12}))
+        assert r.compute_s == pytest.approx(1.0e15 / 1.0e12 / 256)
+
+    def test_int8_flops_clamped_to_total(self):
+        r = analyze_cell(_artifact(flops=1e12, int8_flops=9e15))
+        assert r.compute_s == pytest.approx(
+            1e12 / V5E_PEAKS["int8_flops"] / 256)
+
+    def test_bad_artifacts_rejected(self, tmp_path):
+        with pytest.raises(ValueError):
+            analyze_cell(_artifact(flops="a lot"))
+        p = tmp_path / "broken_pod16x16.json"
+        p.write_text("[1, 2, 3]")
+        with pytest.raises(ValueError):
+            analyze_cell(p)
