@@ -12,7 +12,6 @@ measurement we map to the v5e peak model.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from pathlib import Path
 
@@ -58,8 +57,12 @@ def bench_table1_must(quick: bool) -> list:
 
 
 def bench_gemm_accuracy(quick: bool) -> list:
-    """Emulation accuracy ladder on a plain DGEMM (Table 1 trend)."""
-    from repro.core import ozaki_matmul
+    """Emulation accuracy ladder on a plain DGEMM (Table 1 trend).
+
+    Engines are resolved through the backend registry by spec string —
+    the same dispatch path the interceptor and the MuST app use.
+    """
+    from repro.core import get_backend
 
     rng = np.random.default_rng(0)
     n = 256 if quick else 512
@@ -68,15 +71,12 @@ def bench_gemm_accuracy(quick: bool) -> list:
     ref = a @ b
     denom = jnp.abs(a) @ jnp.abs(b)
     rows = []
-    for s in [3, 5, 7, 9]:
-        fn = lambda a, b: ozaki_matmul(a, b, num_splits=s,
-                                       accumulator="df32",
-                                       out_dtype=jnp.float64)
+    for spec in [f"fp64_int8_{s}" for s in (3, 5, 7, 9)] + ["dgemm"]:
+        backend = get_backend(spec)
+        fn = lambda a, b: backend(a, b, out_dtype=jnp.float64)  # noqa: E731
         us = _timeit(jax.jit(fn), a, b)
         err = float(jnp.max(jnp.abs(fn(a, b) - ref) / denom))
-        rows.append(f"dgemm_int8_{s}_{n},{us:.0f},maxrel={err:.3e}")
-    us = _timeit(jax.jit(lambda a, b: a @ b), a, b)
-    rows.append(f"dgemm_native_{n},{us:.0f},maxrel=0")
+        rows.append(f"gemm_{spec}_{n},{us:.0f},maxrel={err:.3e}")
     return rows
 
 
@@ -115,13 +115,12 @@ def bench_kernel_pallas(quick: bool) -> list:
         # Pallas interpret mode has no hardware requirements but can be
         # unavailable (no pallas in the jaxlib build, Mosaic-only
         # wheels): skip the row with a reason instead of failing the
-        # whole bench.
-        from repro.kernels import ops
+        # whole bench.  The registry backend picks interpret mode
+        # automatically off-TPU.
+        from repro.core import get_backend
 
-        us_pal = _timeit(
-            lambda a, b: ops.ozaki_matmul(a, b, num_splits=6,
-                                          interpret=True),
-            a, b, reps=2)
+        pallas6 = get_backend("pallas_int8_6")
+        us_pal = _timeit(lambda a, b: pallas6(a, b), a, b, reps=2)
         rows.append(f"ozaki6_pallas_interpret_{n},{us_pal:.0f},"
                     f"backend=interpret(correctness-only)")
     except Exception as e:  # noqa: BLE001 - degrade, don't fail
@@ -150,6 +149,44 @@ def bench_intercept(quick: bool) -> list:
     us = _timeit(wrapped, a, b)
     return [f"offload_first_call,{trace_us:.0f},includes_trace_and_compile",
             f"offload_steady_state,{us:.0f},per_call"]
+
+
+def bench_offload_batched(quick: bool) -> list:
+    """Batched (rank-3) offload: vmapped contour-point GEMMs.
+
+    A MuST-shaped batch — one GEMM per energy point ``z_k`` of the
+    contour, all issued as a single batched ``dot_general`` — exercises
+    the transform's reshape/vmap batched path end to end.
+    """
+    from repro.core import PrecisionPolicy, offload
+
+    rng = np.random.default_rng(3)
+    n = 128 if quick else 192
+    n_energies = 8 if quick else 16
+    h = jnp.asarray(rng.standard_normal((n, n)))
+    h = 0.5 * (h + h.T)
+    z = jnp.linspace(0.1, 1.3, n_energies) + 0.03j
+    mats = z[:, None, None] * jnp.eye(n) - h.astype(jnp.complex128)
+    blocks = jnp.asarray(rng.standard_normal((n_energies, n, n)),
+                         jnp.complex128)
+
+    def contour_gemms(mats, blocks):
+        return jax.vmap(jnp.matmul)(mats, blocks)
+
+    pol = PrecisionPolicy(default_splits=6, min_dim=64,
+                          accumulator="f64")
+    wrapped = jax.jit(offload(contour_gemms, pol))
+    native = jax.jit(contour_gemms)
+    ref = native(mats, blocks)
+    got = wrapped(mats, blocks)
+    err = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+    us_emul = _timeit(wrapped, mats, blocks)
+    us_nat = _timeit(native, mats, blocks)
+    return [
+        f"offload_batched_int8_6,{us_emul:.0f},"
+        f"batch={n_energies};n={n};maxrel={err:.3e}",
+        f"offload_batched_native,{us_nat:.0f},batch={n_energies};n={n}",
+    ]
 
 
 def bench_roofline(quick: bool) -> list:
@@ -181,8 +218,8 @@ def bench_roofline(quick: bool) -> list:
 
 
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
-           bench_kernel_pallas, bench_intercept, bench_table1_must,
-           bench_roofline]
+           bench_kernel_pallas, bench_intercept, bench_offload_batched,
+           bench_table1_must, bench_roofline]
 
 
 def main() -> None:

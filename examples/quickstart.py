@@ -3,8 +3,10 @@
 Runs in ~a minute on CPU:
   1. accuracy-vs-splits sweep of the emulated DGEMM (paper Table 1 trend);
   2. the PEAK-profiler analogue: enumerate BLAS-3 sites of an *unmodified*
-     JAX function and offload them at a chosen precision, no code changes;
-  3. adaptive split selection (the paper's proposed dynamic tuning).
+     JAX function and offload them at a chosen precision, no code changes,
+     then tune a single site through its stable structural name;
+  3. adaptive split selection (the paper's proposed dynamic tuning);
+  4. the backend registry: every engine behind one spec-string dispatch.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,8 +18,9 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AdaptiveGemm, PrecisionPolicy, measure_splits,
-                        offload, ozaki_matmul, predict_splits, site_report)
+from repro.core import (AdaptiveGemm, PrecisionPolicy, get_backend,
+                        measure_splits, offload, ozaki_matmul,
+                        predict_splits, site_report)
 
 
 def accuracy_sweep():
@@ -58,6 +61,27 @@ def automatic_offload():
     print(f"native={float(ref):.8f}  emulated={float(got):.8f}  "
           f"rel err={abs(float(got - ref)) / abs(float(ref)):.2e}")
 
+    # The names printed above are stable policy keys: tune one site.
+    tuned = PrecisionPolicy(default_splits=6, min_dim=256,
+                            site_splits={"dot0": 9})
+    print("per-site override (dot0 -> 9 splits):")
+    for site in offload(legacy_solver, tuned).sites(a, b):
+        print("  ", site)
+
+
+def backend_registry():
+    print("\n=== 4. One registry, every engine (spec strings) ===")
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((256, 256)))
+    b = jnp.asarray(rng.standard_normal((256, 256)))
+    ref = a @ b
+    denom = jnp.abs(a) @ jnp.abs(b)
+    for spec in ("dgemm", "fp64_int8_4", "fp64_int8_8", "adaptive:1e-9"):
+        gemm = get_backend(spec)
+        err = float(jnp.max(jnp.abs(gemm(a, b, out_dtype=jnp.float64)
+                                    - ref) / denom))
+        print(f"  {spec:>14s}: max rel err {err:.2e}")
+
 
 def adaptive():
     print("\n=== 3. Tunable precision: adaptive split selection ===")
@@ -78,3 +102,4 @@ if __name__ == "__main__":
     accuracy_sweep()
     automatic_offload()
     adaptive()
+    backend_registry()

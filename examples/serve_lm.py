@@ -8,8 +8,6 @@ at 512 devices.
   PYTHONPATH=src python examples/serve_lm.py
 """
 
-import json
-
 import jax
 import numpy as np
 

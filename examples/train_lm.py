@@ -12,7 +12,6 @@ emulated backward — "tunable precision training").
 
 import argparse
 import json
-import sys
 
 from repro.launch.train import main as train_main
 

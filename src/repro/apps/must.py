@@ -11,10 +11,13 @@ stand-in: a dense Hermitian "Hamiltonian" with an eigenvalue cluster
 near the Fermi energy.  For each energy ``z`` on a contour just above
 the real axis we form ``M = z I - H`` and compute the resolvent
 ``G(z) = M^{-1}`` by blocked LU factorization plus blocked triangular
-solves, where **every block GEMM goes through a pluggable backend**:
+solves, where **every block GEMM goes through a registry backend**
+(:mod:`repro.core.backends` — any spec string works as a mode):
 
 * ``"dgemm"``          — native float64 complex matmul (reference);
-* ``"fp64_int8_{s}"``  — Ozaki INT8 emulation with ``s`` splits.
+* ``"fp64_int8_{s}"``  — Ozaki INT8 emulation with ``s`` splits;
+* ``"pallas_int8_{s}"``— the fused Pallas kernel (interpret on CPU);
+* ``"adaptive:{tol}"`` — per-site split tuning to a target error.
 
 Small per-block factorizations (the LAPACK part MuST keeps on the
 host) remain native float64 in all modes, so the accuracy difference
@@ -29,18 +32,16 @@ count grows.
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Callable, Dict
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ozaki import ozaki_matmul
+from repro.core.backends import get_backend
+from repro.core.precision import PrecisionPolicy
 
 __all__ = ["MustConfig", "build_system", "run_contour",
            "relative_errors"]
-
-_MODE_RE = re.compile(r"fp64_int8_(\d+)")
 
 
 @dataclasses.dataclass
@@ -91,18 +92,18 @@ def build_system(cfg: MustConfig) -> Dict[str, np.ndarray]:
 
 def _make_gemm(mode: str) -> Callable[[np.ndarray, np.ndarray],
                                       np.ndarray]:
-    """Block-GEMM backend for the given mode string."""
-    if mode == "dgemm":
-        return lambda a, b: a @ b
-    m = _MODE_RE.fullmatch(mode)
-    if not m:
-        raise ValueError(f"unknown mode {mode!r}; expected 'dgemm' or "
-                         "'fp64_int8_<s>'")
-    s = int(m.group(1))
+    """Resolve a mode string to a numpy-in/numpy-out block GEMM.
+
+    The mode string is a backend spec (see
+    :func:`repro.core.backends.get_backend` for the grammar); the bound
+    policy selects the ``"f64"`` accumulator, the historical choice of
+    this workload (it mirrors ozIMMU on FP64-capable hardware).
+    """
+    backend = get_backend(mode, policy=PrecisionPolicy(accumulator="f64"))
 
     def gemm(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-        c = ozaki_matmul(jnp.asarray(a), jnp.asarray(b), num_splits=s,
-                         accumulator="f64", out_dtype=jnp.complex128)
+        c = backend(jnp.asarray(a), jnp.asarray(b),
+                    out_dtype=jnp.complex128, site="zblock_lu")
         return np.asarray(c)
 
     return gemm

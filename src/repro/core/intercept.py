@@ -1,53 +1,94 @@
-"""Automatic BLAS offload: rewrite ``dot_general`` sites in any JAX fn.
+"""Automatic BLAS offload: a jaxpr->jaxpr transform over ``dot_general``.
 
 The paper intercepts BLAS calls of an *unmodified* application at the
 linker level and redirects large GEMMs to the INT8 emulation engine.
-The JAX analogue is a jaxpr interpreter: trace the user function,
-walk the resulting jaxpr, and re-emit every qualifying ``dot_general``
-through :func:`repro.core.ozaki.ozaki_matmul` while binding every other
-primitive unchanged.  The user function is never edited — this is the
-"automatic offloading" axis of the paper's title.
+The JAX analogue implemented here is a program transformation: trace
+the user function once per input signature, rewrite every qualifying
+``dot_general`` in the resulting :class:`ClosedJaxpr` to run through
+the policy's GEMM backend (:mod:`repro.core.backends`), and evaluate
+the *transformed* jaxpr on subsequent calls — so ``jax.jit(offload(fn))``
+compiles the rewritten program with no per-call re-tracing.
+
+What the transform covers:
+
+* plain 2-D ``dot_general`` (any transposition of the contraction);
+* batched and rank-N ``dot_general`` — batch/free/contraction axes are
+  normalized to ``(B, M, K) @ (B, K, N)`` by transpose+reshape and the
+  2-D backend is ``vmap``-ped over the merged batch axis (loop-free);
+* sites inside ``pjit`` / ``remat`` (``jax.checkpoint``) bodies, which
+  are inlined transparently;
+* sites inside ``scan`` / ``while`` / ``cond`` bodies, which are
+  rebuilt with transformed bodies;
+* reverse-mode AD: each offloaded site carries a ``custom_vjp`` whose
+  backward pass runs the *same* backend on the transposed operands
+  ("emulated backward"), so ``jax.grad`` works through offloaded code.
+
+Functions wrapped in ``jax.custom_jvp``/``jax.custom_vjp`` are left
+opaque — rewriting their primal would silently discard the user's
+derivative rule — so their internal matmuls stay native.
+
+Site naming is structural and **shared verbatim** between
+:func:`site_report` and :func:`offload`: ``dot{i}`` numbers the
+``dot_general`` sites of a scope in program order (call-like primitives
+are inlined into the enclosing scope), and control-flow bodies extend
+the path — ``scan0/dot1``, ``while2/cond/dot0``, ``cond1/br0/dot0``.
+``PrecisionPolicy.site_splits`` keys against exactly these names, which
+is the paper's "enumerate first, then tune per site" workflow.
 
 Public API
 ----------
 
 ``offload(fn, policy)``
-    Returns a drop-in replacement for ``fn`` whose large matmuls run
-    emulated.  Composable with ``jax.jit``.
+    Drop-in replacement for ``fn`` whose large matmuls run emulated.
+    ``offload(fn, policy).sites(*args)`` returns the Site decisions for
+    a given input signature without computing.
 
 ``site_report(fn, policy)``
-    Returns a function that, instead of computing, lists the BLAS-3
-    sites the interceptor would touch (name, shapes, dtype, decision)
-    — the PEAK-profiler "enumerate first, then offload" workflow.
+    Same-signature function that lists the BLAS-3 sites the transform
+    would touch (name, shapes, dtype, decision) instead of computing.
+
+``transform_jaxpr(closed_jaxpr, policy)``
+    The raw jaxpr->jaxpr transform: returns ``(transformed, sites)``.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+import math
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:  # jax >= 0.4.35 exposes the jaxpr IR under jax.extend.core
     from jax.extend import core as jex_core
 except ImportError:  # pragma: no cover - older jax
     from jax import core as jex_core
 
-from .ozaki import ozaki_matmul
+from .backends import GemmBackend, get_backend
 from .precision import PrecisionPolicy
 
-__all__ = ["offload", "site_report", "Site"]
+__all__ = ["offload", "site_report", "transform_jaxpr", "Site"]
 
-# Higher-order primitives whose body jaxpr we descend into so nested
-# dot_generals are rewritten too.  (Control-flow primitives — scan,
-# while, cond — are bound natively for now; their bodies re-enter the
-# interceptor only if the user offloads them separately.)
-_CALL_PRIMITIVES = {"pjit", "closed_call", "custom_jvp_call",
-                    "custom_vjp_call", "remat", "checkpoint"}
+# Call-like primitives whose body jaxpr is inlined into the enclosing
+# scope: they neither change shapes nor iterate, so their sites share
+# the enclosing scope's dot numbering.  ("remat2" is the actual
+# primitive behind jax.checkpoint/jax.remat; inlining it only trades
+# the rematerialization schedule, not values or derivatives.)
+# Control-flow primitives (scan/while/cond) get their own scope path
+# and dedicated rebuild handlers below.  Custom-derivative calls
+# (custom_jvp_call / custom_vjp_call*) are deliberately NOT inlined:
+# their bodies define their own differentiation semantics
+# (stop-gradients, stabilized rules), so inlining the primal would
+# silently replace the user's rule under jax.grad.  They take the
+# default native re-bind and their internal matmuls stay native; wrap
+# the function's *caller* if those sites matter.
+_INLINE_PRIMITIVES = {"pjit", "closed_call", "remat", "remat2",
+                      "checkpoint"}
 
 
 class Site:
-    """One discovered ``dot_general`` site."""
+    """One discovered ``dot_general`` site and the decision taken."""
 
     def __init__(self, name: str, lhs_shape, rhs_shape, dtype,
                  offloaded: bool, splits: int, reason: str):
@@ -60,53 +101,10 @@ class Site:
         self.reason = reason
 
     def __repr__(self):
-        action = (f"offload fp64_int8_{self.splits}" if self.offloaded
+        action = (f"offload splits={self.splits}" if self.offloaded
                   else f"native ({self.reason})")
         return (f"{self.name}: {self.lhs_shape} @ {self.rhs_shape} "
                 f"{self.dtype.name} -> {action}")
-
-
-def _classify(eqn, policy: PrecisionPolicy, name: str) -> Site:
-    """Decide whether one dot_general equation gets offloaded."""
-    lhs_aval, rhs_aval = (v.aval for v in eqn.invars)
-    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
-    dtype = eqn.outvars[0].aval.dtype
-
-    def skip(reason):
-        return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
-                    False, 0, reason)
-
-    if lb or rb:
-        return skip("batched")
-    if lhs_aval.ndim != 2 or rhs_aval.ndim != 2:
-        return skip(f"rank {lhs_aval.ndim}x{rhs_aval.ndim}")
-    if len(lc) != 1 or len(rc) != 1:
-        return skip("multi-dim contraction")
-    if not (jnp.issubdtype(dtype, jnp.floating)
-            or jnp.issubdtype(dtype, jnp.complexfloating)):
-        return skip(f"dtype {jnp.dtype(dtype).name}")
-    m = lhs_aval.shape[1 - lc[0]]
-    k = lhs_aval.shape[lc[0]]
-    n = rhs_aval.shape[1 - rc[0]]
-    if min(m, k, n) < policy.min_dim:
-        return skip(f"min(m,k,n)={min(m, k, n)} < min_dim={policy.min_dim}")
-    return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
-                True, policy.splits_for(name), "")
-
-
-def _emulated_dot(lhs, rhs, eqn, site: Site, policy: PrecisionPolicy):
-    """Re-emit a qualifying dot_general through the Ozaki engine."""
-    (lc, rc), _ = eqn.params["dimension_numbers"]
-    # Normalize to (m, k) @ (k, n): move the contraction axes inward.
-    if lc[0] != 1:
-        lhs = jnp.swapaxes(lhs, 0, 1)
-    if rc[0] != 0:
-        rhs = jnp.swapaxes(rhs, 0, 1)
-    out = ozaki_matmul(lhs, rhs, num_splits=site.splits,
-                       accumulator=policy.accumulator,
-                       out_dtype=eqn.outvars[0].aval.dtype,
-                       slice_bits=policy.slice_bits)
-    return out
 
 
 def _subjaxprs(eqn):
@@ -122,90 +120,374 @@ def _subjaxprs(eqn):
         return
 
 
-def _walk_sites(jaxpr, policy: PrecisionPolicy, sites: List[Site],
-                prefix: str) -> None:
-    """Collect dot_general sites without executing anything."""
+def _walk_sites(jaxpr, prefix: str = "", dot_counter=None,
+                flow_counter=None, out=None) -> List[Tuple[Any, str]]:
+    """Enumerate ``dot_general`` equations with their structural names.
+
+    This single walker is the naming authority: both :func:`site_report`
+    and the offload transform consume its ``(eqn, name)`` pairs, so the
+    two APIs can never diverge.
+    """
+    dot_counter = [0] if dot_counter is None else dot_counter
+    flow_counter = [0] if flow_counter is None else flow_counter
+    out = [] if out is None else out
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "dot_general":
-            sites.append(_classify(eqn, policy,
-                                   f"{prefix}dot{len(sites)}"))
-        elif eqn.primitive.name in _CALL_PRIMITIVES:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            out.append((eqn, f"{prefix}dot{dot_counter[0]}"))
+            dot_counter[0] += 1
+        elif prim in _INLINE_PRIMITIVES:
             for sub, _ in _subjaxprs(eqn):
-                _walk_sites(sub, policy, sites, prefix)
+                _walk_sites(sub, prefix, dot_counter, flow_counter, out)
+        elif prim == "scan":
+            body = eqn.params["jaxpr"]
+            _walk_sites(body.jaxpr, f"{prefix}scan{flow_counter[0]}/",
+                        out=out)
+            flow_counter[0] += 1
+        elif prim == "while":
+            pfx = f"{prefix}while{flow_counter[0]}/"
+            _walk_sites(eqn.params["cond_jaxpr"].jaxpr, pfx + "cond/",
+                        out=out)
+            _walk_sites(eqn.params["body_jaxpr"].jaxpr, pfx, out=out)
+            flow_counter[0] += 1
+        elif prim == "cond":
+            pfx = f"{prefix}cond{flow_counter[0]}/"
+            for bi, br in enumerate(eqn.params["branches"]):
+                _walk_sites(br.jaxpr, f"{pfx}br{bi}/", out=out)
+            flow_counter[0] += 1
+    return out
 
 
-def _eval_jaxpr(jaxpr, consts: Sequence[Any], args: Sequence[Any],
-                policy: PrecisionPolicy, counter: List[int]):
-    """Interpret a jaxpr, swapping qualifying dot_generals for emulation."""
-    env = {}
+def _classify(eqn, policy: PrecisionPolicy, name: str) -> Site:
+    """Decide whether one dot_general equation gets offloaded."""
+    lhs_aval, rhs_aval = (v.aval for v in eqn.invars)
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    dtype = eqn.outvars[0].aval.dtype
 
-    def read(v):
+    def skip(reason):
+        return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
+                    False, 0, reason)
+
+    if not (jnp.issubdtype(dtype, jnp.floating)
+            or jnp.issubdtype(dtype, jnp.complexfloating)):
+        return skip(f"dtype {jnp.dtype(dtype).name}")
+    # The same normalization that will execute (batch dims excluded,
+    # free/contraction extents merged) decides the size gate.
+    dims = _DotDims(eqn.params["dimension_numbers"],
+                    lhs_aval.shape, rhs_aval.shape)
+    m, k, n = dims.M, dims.K, dims.N
+    if min(m, k, n) < policy.min_dim:
+        return skip(f"min(m,k,n)={min(m, k, n)} < min_dim={policy.min_dim}")
+    return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
+                True, policy.splits_for(name), "")
+
+
+class _DotDims:
+    """Normalization of a general ``dot_general`` to ``(B, M, K) @ (B, K, N)``.
+
+    Batch axes merge (in batch-dim order) into a leading ``B``, the
+    free/contraction axes merge into ``M``/``K``/``N``.  The inverse
+    mappings recover operand-shaped cotangents for the backward pass.
+    """
+
+    def __init__(self, dimension_numbers, lhs_shape, rhs_shape):
+        (lc, rc), (lb, rb) = dimension_numbers
+        lfree = [d for d in range(len(lhs_shape))
+                 if d not in lc and d not in lb]
+        rfree = [d for d in range(len(rhs_shape))
+                 if d not in rc and d not in rb]
+        self.lperm = (*lb, *lfree, *lc)
+        self.rperm = (*rb, *rc, *rfree)
+        self.batch_shape = tuple(lhs_shape[d] for d in lb)
+        self.m_shape = tuple(lhs_shape[d] for d in lfree)
+        self.k_shape = tuple(lhs_shape[d] for d in lc)
+        self.n_shape = tuple(rhs_shape[d] for d in rfree)
+        self.has_batch = bool(lb)
+        self.B = math.prod(self.batch_shape)
+        self.M = math.prod(self.m_shape)
+        self.K = math.prod(self.k_shape)
+        self.N = math.prod(self.n_shape)
+
+    def _lead(self, *tail):
+        return (self.B, *tail) if self.has_batch else tail
+
+    def pack_lhs(self, lhs):
+        return jnp.transpose(lhs, self.lperm).reshape(
+            self._lead(self.M, self.K))
+
+    def pack_rhs(self, rhs):
+        return jnp.transpose(rhs, self.rperm).reshape(
+            self._lead(self.K, self.N))
+
+    def pack_out(self, out):  # dot_general output is (batch, lfree, rfree)
+        return out.reshape(self._lead(self.M, self.N))
+
+    def unpack_out(self, y):
+        return y.reshape(self.batch_shape + self.m_shape + self.n_shape)
+
+    def unpack_lhs(self, dl):
+        dl = dl.reshape(self.batch_shape + self.m_shape + self.k_shape)
+        return jnp.transpose(dl, np.argsort(self.lperm))
+
+    def unpack_rhs(self, dr):
+        dr = dr.reshape(self.batch_shape + self.k_shape + self.n_shape)
+        return jnp.transpose(dr, np.argsort(self.rperm))
+
+
+def _site_dot(backend: GemmBackend, site: Site, dims: "_DotDims",
+              out_dtype):
+    """Build the backend-routed, AD-aware replacement for one site.
+
+    Forward: normalized operands through the backend (``vmap`` over the
+    merged batch axis when present).  Backward (``custom_vjp``): the
+    standard matmul cotangents ``dA = g @ B^T`` / ``dB = A^T @ g``,
+    also executed by the backend — tunable precision end to end.
+    """
+
+    def mm(a2, b2, odt):
+        return backend(a2, b2, out_dtype=odt, num_splits=site.splits,
+                       site=site.name)
+
+    def bmm(a3, b3, odt):
+        if dims.has_batch:
+            return jax.vmap(lambda x, y: mm(x, y, odt))(a3, b3)
+        return mm(a3, b3, odt)
+
+    def fwd_impl(lhs, rhs):
+        y = bmm(dims.pack_lhs(lhs), dims.pack_rhs(rhs), out_dtype)
+        return dims.unpack_out(y)
+
+    @jax.custom_vjp
+    def dot(lhs, rhs):
+        return fwd_impl(lhs, rhs)
+
+    def dot_fwd(lhs, rhs):
+        return fwd_impl(lhs, rhs), (lhs, rhs)
+
+    def dot_bwd(res, g):
+        lhs, rhs = res
+        l3 = dims.pack_lhs(lhs)
+        r3 = dims.pack_rhs(rhs)
+        g3 = dims.pack_out(g)
+        swap = lambda x: jnp.swapaxes(x, -1, -2)  # noqa: E731
+        dl = bmm(g3, swap(r3), lhs.dtype)
+        dr = bmm(swap(l3), g3, rhs.dtype)
+        return dims.unpack_lhs(dl), dims.unpack_rhs(dr)
+
+    dot.defvjp(dot_fwd, dot_bwd)
+    return dot
+
+
+def transform_jaxpr(closed, policy: PrecisionPolicy,
+                    backend: GemmBackend | None = None):
+    """Rewrite ``closed`` (a ``ClosedJaxpr``) for emulated execution.
+
+    Returns ``(transformed, sites)``: a new ``ClosedJaxpr`` with every
+    offloaded ``dot_general`` replaced by a backend-routed subgraph
+    (wrapped in its ``custom_vjp``), and the :class:`Site` decisions in
+    discovery order.  The transform runs once; evaluating the result
+    (``jax.core.eval_jaxpr``) never re-traces the user function.
+    """
+    backend = backend or get_backend(policy.backend, policy=policy)
+    sites: List[Site] = []
+    decisions: Dict[str, Site] = {}
+    for eqn, name in _walk_sites(closed.jaxpr):
+        site = _classify(eqn, policy, name)
+        sites.append(site)
+        decisions[name] = site
+
+    def read_env(env, v):
         return v.val if isinstance(v, jex_core.Literal) else env[v]
 
-    def write(v, val):
-        env[v] = val
+    # Decisions are keyed by the structural *name*, and the evaluator
+    # re-derives names with the exact counter discipline of
+    # _walk_sites.  Keying by equation identity would be wrong: JAX's
+    # tracing cache reuses one body jaxpr object (hence the same eqn
+    # objects) for every call of a jit-ed inner function, so distinct
+    # sites can share an eqn.
+    def eval_rewritten(jaxpr, consts: Sequence[Any], args: Sequence[Any],
+                       prefix: str = "", dot_counter=None,
+                       flow_counter=None):
+        dot_counter = [0] if dot_counter is None else dot_counter
+        flow_counter = [0] if flow_counter is None else flow_counter
+        env = {}
+        for var, const in zip(jaxpr.constvars, consts):
+            env[var] = const
+        for var, arg in zip(jaxpr.invars, args):
+            env[var] = arg
 
-    for var, const in zip(jaxpr.constvars, consts):
-        write(var, const)
-    for var, arg in zip(jaxpr.invars, args):
-        write(var, arg)
-
-    for eqn in jaxpr.eqns:
-        invals = [read(v) for v in eqn.invars]
-        name = eqn.primitive.name
-        if name == "dot_general":
-            site = _classify(eqn, policy, f"dot{counter[0]}")
-            counter[0] += 1
-            if site.offloaded:
-                outvals = [_emulated_dot(invals[0], invals[1], eqn,
-                                         site, policy)]
+        for eqn in jaxpr.eqns:
+            invals = [read_env(env, v) for v in eqn.invars]
+            prim = eqn.primitive.name
+            if prim == "dot_general":
+                site = decisions[f"{prefix}dot{dot_counter[0]}"]
+                dot_counter[0] += 1
+                if site.offloaded:
+                    dims = _DotDims(eqn.params["dimension_numbers"],
+                                    site.lhs_shape, site.rhs_shape)
+                    fn = _site_dot(backend, site, dims,
+                                   eqn.outvars[0].aval.dtype)
+                    outvals = [fn(invals[0], invals[1])]
+                else:
+                    outvals = [eqn.primitive.bind(*invals, **eqn.params)]
+            elif prim in _INLINE_PRIMITIVES:
+                outvals = None
+                for sub, sub_consts in _subjaxprs(eqn):
+                    outvals = eval_rewritten(sub, sub_consts, invals,
+                                             prefix, dot_counter,
+                                             flow_counter)
+                if outvals is None:  # no body found — bind natively
+                    outvals = eqn.primitive.bind(*invals, **eqn.params)
+                    if not eqn.primitive.multiple_results:
+                        outvals = [outvals]
+            elif prim == "scan":
+                pfx = f"{prefix}scan{flow_counter[0]}/"
+                flow_counter[0] += 1
+                outvals = _eval_scan(eqn, invals, eval_rewritten, pfx)
+            elif prim == "while":
+                pfx = f"{prefix}while{flow_counter[0]}/"
+                flow_counter[0] += 1
+                outvals = _eval_while(eqn, invals, eval_rewritten, pfx)
+            elif prim == "cond":
+                pfx = f"{prefix}cond{flow_counter[0]}/"
+                flow_counter[0] += 1
+                outvals = _eval_cond(eqn, invals, eval_rewritten, pfx)
             else:
-                outvals = [eqn.primitive.bind(*invals, **eqn.params)]
-        elif name in _CALL_PRIMITIVES:
-            handled = False
-            for sub, sub_consts in _subjaxprs(eqn):
-                outvals = _eval_jaxpr(sub, sub_consts, invals, policy,
-                                      counter)
-                handled = True
-            if not handled:  # no body found — bind natively
-                outvals = eqn.primitive.bind(*invals, **eqn.params)
+                # Canonical re-bind (same as jax.core.eval_jaxpr):
+                # get_bind_params re-wraps staged params — e.g. the
+                # jvp/fwd/bwd rules of opaque custom-derivative calls —
+                # into bindable form; plain primitives pass through.
+                subfuns, bind_params = eqn.primitive.get_bind_params(
+                    eqn.params)
+                outvals = eqn.primitive.bind(*subfuns, *invals,
+                                             **bind_params)
                 if not eqn.primitive.multiple_results:
                     outvals = [outvals]
-        else:
-            outvals = eqn.primitive.bind(*invals, **eqn.params)
-            if not eqn.primitive.multiple_results:
-                outvals = [outvals]
-        for var, val in zip(eqn.outvars, outvals):
-            write(var, val)
+            for var, val in zip(eqn.outvars, outvals):
+                env[var] = val
 
-    return [read(v) for v in jaxpr.outvars]
+        return [read_env(env, v) for v in jaxpr.outvars]
+
+    def interp(*flat_args):
+        return eval_rewritten(closed.jaxpr, closed.consts, flat_args)
+
+    in_specs = [jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                for v in closed.jaxpr.invars]
+    transformed = jax.make_jaxpr(interp)(*in_specs)
+    return transformed, sites
+
+
+def _eval_scan(eqn, invals, eval_body, prefix):
+    """Rebuild a ``scan`` with its body routed through the rewriter."""
+    p = eqn.params
+    nc, ncar = p["num_consts"], p["num_carry"]
+    body = p["jaxpr"]
+    consts = invals[:nc]
+    init = tuple(invals[nc:nc + ncar])
+    xs = tuple(invals[nc + ncar:])
+
+    def body_fun(carry, x):
+        # Fresh counters per trace of the body: scan may re-trace it
+        # (carry fixed-point), and names must restart each time.
+        outs = eval_body(body.jaxpr, body.consts, [*consts, *carry, *x],
+                         prefix)
+        return tuple(outs[:ncar]), tuple(outs[ncar:])
+
+    carry_out, ys = jax.lax.scan(body_fun, init, xs, length=p["length"],
+                                 reverse=p["reverse"],
+                                 unroll=p.get("unroll", 1))
+    return [*carry_out, *ys]
+
+
+def _eval_while(eqn, invals, eval_body, prefix):
+    """Rebuild a ``while`` with cond/body routed through the rewriter."""
+    p = eqn.params
+    cn, bn = p["cond_nconsts"], p["body_nconsts"]
+    cond_jaxpr, body_jaxpr = p["cond_jaxpr"], p["body_jaxpr"]
+    cconsts = invals[:cn]
+    bconsts = invals[cn:cn + bn]
+    init = tuple(invals[cn + bn:])
+
+    def cond_fun(val):
+        return eval_body(cond_jaxpr.jaxpr, cond_jaxpr.consts,
+                         [*cconsts, *val], prefix + "cond/")[0]
+
+    def body_fun(val):
+        return tuple(eval_body(body_jaxpr.jaxpr, body_jaxpr.consts,
+                               [*bconsts, *val], prefix))
+
+    return list(jax.lax.while_loop(cond_fun, body_fun, init))
+
+
+def _eval_cond(eqn, invals, eval_body, prefix):
+    """Rebuild a ``cond``/``switch`` with rewritten branches."""
+    branches = eqn.params["branches"]
+    index, *operands = invals
+
+    def branch_fun(bi, br):
+        return lambda *ops: tuple(eval_body(br.jaxpr, br.consts,
+                                            list(ops),
+                                            f"{prefix}br{bi}/"))
+
+    return list(jax.lax.switch(
+        index, [branch_fun(bi, br) for bi, br in enumerate(branches)],
+        *operands))
+
+
+def _signature(flat_args):
+    # Python scalars trace as weakly-typed avals: keep them distinct
+    # from same-dtype arrays so a cached transform is never reused
+    # across a promotion-semantics boundary.
+    return tuple((jnp.shape(x), jnp.result_type(x),
+                  isinstance(x, (bool, int, float, complex)))
+                 for x in flat_args)
 
 
 def offload(fn, policy: PrecisionPolicy | None = None):
-    """Wrap ``fn`` so its large matmuls run INT8-emulated.
+    """Wrap ``fn`` so its large matmuls run through the policy backend.
 
-    ``fn`` is traced with ``jax.make_jaxpr`` on each call (cheap, and
-    cached by XLA once jitted); every ``dot_general`` whose operand
-    dimensions all reach ``policy.min_dim`` is rewritten through
-    :func:`ozaki_matmul` with the policy's split count.  All other
-    primitives — including ones inside nested ``pjit``/``custom_jvp``
-    bodies — execute unchanged.
+    The first call for a given input signature traces ``fn`` once and
+    transforms the jaxpr (see :func:`transform_jaxpr`); the transformed
+    program is cached and later calls only evaluate it, so
+    ``jax.jit(offload(fn, policy))`` compiles with no per-call
+    re-tracing.  Batched/rank-N sites, sites inside ``scan``/``while``/
+    ``cond`` bodies, and reverse-mode AD are all supported; see the
+    module docstring.
 
-    The wrapper is itself traceable: ``jax.jit(offload(fn, policy))``
-    compiles the rewritten computation.
+    The returned wrapper exposes ``wrapped.sites(*args, **kwargs)``,
+    the exact :class:`Site` decisions taken for that signature — the
+    same objects :func:`site_report` would produce, same names.
     """
     policy = policy or PrecisionPolicy()
+    backend = get_backend(policy.backend, policy=policy)
+    cache: Dict[Any, Any] = {}
+
+    def build(args, kwargs):
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        key = (in_tree, _signature(flat))
+        entry = cache.get(key)
+        if entry is None:
+            closed, out_shape = jax.make_jaxpr(
+                fn, return_shape=True)(*args, **kwargs)
+            transformed, sites = transform_jaxpr(closed, policy, backend)
+            out_tree = jax.tree_util.tree_structure(out_shape)
+            entry = cache[key] = (transformed, sites, out_tree)
+        return flat, entry
 
     def wrapped(*args, **kwargs):
-        closed, out_shape = jax.make_jaxpr(
-            fn, return_shape=True)(*args, **kwargs)
-        flat_args = jax.tree_util.tree_leaves((args, kwargs))
-        flat_out = _eval_jaxpr(closed.jaxpr, closed.consts, flat_args,
-                               policy, counter=[0])
-        out_tree = jax.tree_util.tree_structure(out_shape)
-        return jax.tree_util.tree_unflatten(out_tree, flat_out)
+        flat, (transformed, _, out_tree) = build(args, kwargs)
+        out_flat = jax.core.eval_jaxpr(transformed.jaxpr,
+                                       transformed.consts, *flat)
+        return jax.tree_util.tree_unflatten(out_tree, out_flat)
+
+    def sites(*args, **kwargs) -> List[Site]:
+        _, (_, site_list, _) = build(args, kwargs)
+        return site_list
 
     wrapped.__name__ = f"offload({getattr(fn, '__name__', 'fn')})"
+    wrapped.sites = sites
+    wrapped.policy = policy
+    wrapped.backend = backend
     return wrapped
 
 
@@ -213,15 +495,16 @@ def site_report(fn, policy: PrecisionPolicy | None = None):
     """Enumerate the BLAS-3 sites ``offload`` would rewrite in ``fn``.
 
     Returns a function with the same signature as ``fn`` that returns a
-    list of :class:`Site` records instead of computing.
+    list of :class:`Site` records instead of computing.  The names are
+    the same structural names :func:`offload` uses (one shared walker),
+    so they are valid ``PrecisionPolicy.site_splits`` keys.
     """
     policy = policy or PrecisionPolicy()
 
     def reporter(*args, **kwargs) -> List[Site]:
         closed = jax.make_jaxpr(fn)(*args, **kwargs)
-        sites: List[Site] = []
-        _walk_sites(closed.jaxpr, policy, sites, prefix="")
-        return sites
+        return [_classify(eqn, policy, name)
+                for eqn, name in _walk_sites(closed.jaxpr)]
 
     reporter.__name__ = f"site_report({getattr(fn, '__name__', 'fn')})"
     return reporter

@@ -39,6 +39,7 @@ import numpy as np
 
 __all__ = [
     "SLICE_BITS",
+    "complex_matmul_via_real",
     "num_pair_gemms",
     "pair_indices",
     "slice_matrix",
@@ -193,6 +194,24 @@ def _real_ozaki(a, b, num_splits, accumulator, out_dtype, slice_bits):
     return c * scale
 
 
+def complex_matmul_via_real(real_matmul, a, b, out_dtype):
+    """Complex product from four real GEMMs — shared by every engine.
+
+    ``real_matmul(x, y, real_out_dtype)`` runs one real matmul; the
+    decomposition, the real working dtype (f64 for complex128, f32
+    otherwise) and the final cast live here so the jnp and Pallas
+    paths cannot drift apart.
+    """
+    out_dtype = jnp.dtype(out_dtype)
+    real_out = jnp.float64 if out_dtype in (jnp.complex128, jnp.float64) \
+        else jnp.float32
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    cr = real_matmul(ar, br, real_out) - real_matmul(ai, bi, real_out)
+    ci = real_matmul(ar, bi, real_out) + real_matmul(ai, br, real_out)
+    return jax.lax.complex(cr, ci).astype(out_dtype)
+
+
 def ozaki_matmul(a, b, num_splits: int = 6, accumulator: str = "df32",
                  out_dtype=None, slice_bits: int = SLICE_BITS):
     """Emulated high-precision matmul ``a @ b`` via INT8 split GEMMs.
@@ -224,16 +243,13 @@ def ozaki_matmul(a, b, num_splits: int = 6, accumulator: str = "df32",
     if jnp.issubdtype(a.dtype, jnp.complexfloating) or \
        jnp.issubdtype(b.dtype, jnp.complexfloating) or \
        jnp.issubdtype(out_dtype, jnp.complexfloating):
-        real_out = jnp.float64 if out_dtype == jnp.complex128 \
-            else jnp.float32
-        part = functools.partial(
-            _real_ozaki, num_splits=num_splits, accumulator=accumulator,
-            out_dtype=real_out, slice_bits=slice_bits)
-        ar, ai = jnp.real(a), jnp.imag(a)
-        br, bi = jnp.real(b), jnp.imag(b)
-        cr = part(ar, br) - part(ai, bi)
-        ci = part(ar, bi) + part(ai, br)
-        return jax.lax.complex(cr, ci).astype(out_dtype)
+        def part(x, y, real_out):
+            return _real_ozaki(x, y, num_splits=num_splits,
+                               accumulator=accumulator,
+                               out_dtype=real_out,
+                               slice_bits=slice_bits)
+
+        return complex_matmul_via_real(part, a, b, out_dtype)
 
     return _real_ozaki(a, b, num_splits, accumulator, out_dtype,
                        slice_bits)

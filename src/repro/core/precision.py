@@ -22,7 +22,6 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .ozaki import SLICE_BITS, ozaki_matmul
 
@@ -31,6 +30,7 @@ __all__ = [
     "SiteState",
     "AdaptiveGemm",
     "predict_splits",
+    "splits_for_tolerance",
     "measure_splits",
     "estimate_rel_error",
 ]
@@ -47,20 +47,29 @@ class PrecisionPolicy:
     Attributes:
       default_splits: split count for sites without an override.
       min_dim: only offload a ``dot_general`` whose m, k and n are all
-        at least this large; smaller GEMMs stay native (emulation
-        overhead cannot amortize, mirroring the paper's size cutoff
-        in the offloading tool).
+        at least this large (batch dimensions do not count; for rank-N
+        contractions m/k/n are the merged free/contraction extents);
+        smaller GEMMs stay native (emulation overhead cannot amortize,
+        mirroring the paper's size cutoff in the offloading tool).
       accumulator: ``"df32"`` or ``"f64"`` (see
         :func:`repro.core.ozaki.ozaki_matmul`).
       slice_bits: mantissa bits per int8 slice.
-      site_splits: per-site split-count overrides, keyed by the site
-        names reported by :func:`repro.core.intercept.site_report`.
+      backend: spec string (see :mod:`repro.core.backends`) naming the
+        engine that offloaded sites execute on.  Leave the family
+        unpinned (``"fp64_int8"``, not ``"fp64_int8_6"``) so
+        ``default_splits``/``site_splits`` stay in charge of precision;
+        a pinned spec is authoritative and bypasses both.
+      site_splits: per-site split-count overrides, keyed by the stable
+        structural site names that :func:`repro.core.intercept.site_report`
+        and :func:`repro.core.intercept.offload` share (e.g. ``"dot1"``,
+        ``"scan0/dot0"``).
     """
 
     default_splits: int = 6
     min_dim: int = 128
     accumulator: str = "df32"
     slice_bits: int = SLICE_BITS
+    backend: str = "fp64_int8"
     site_splits: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def splits_for(self, site: str) -> int:
@@ -81,14 +90,42 @@ def estimate_rel_error(num_splits: int, k: int,
     return 4.0 * math.sqrt(k) * 2.0 ** (-slice_bits * num_splits)
 
 
-def predict_splits(a, b, target_rel: float,
-                   slice_bits: int = SLICE_BITS) -> int:
-    """Smallest split count whose modeled error meets ``target_rel``."""
-    k = a.shape[-1]
+def splits_for_tolerance(target_rel: float, k: int,
+                         slice_bits: int = SLICE_BITS) -> int:
+    """Smallest split count whose modeled error meets ``target_rel``.
+
+    Shape-only version of :func:`predict_splits`: usable inside traces
+    (``jit``/``vmap``/the offload transform) where operand *values* are
+    abstract but the contraction extent ``k`` is static.
+    """
     for s in range(1, MAX_SPLITS + 1):
         if estimate_rel_error(s, k, slice_bits) <= target_rel:
             return s
     return MAX_SPLITS
+
+
+def predict_splits(a, b=None, target_rel: float = 1e-9,
+                   slice_bits: int = SLICE_BITS) -> int:
+    """Smallest split count whose modeled error meets ``target_rel``.
+
+    The bound only depends on the operands through the shared
+    contraction extent ``K`` (the error model
+    :func:`estimate_rel_error` is ``4 sqrt(K) 2**(-w s)``): ``K`` is
+    read off both operands — ``a``'s last axis and ``b``'s
+    second-to-last (matmul convention) — and a mismatch raises rather
+    than silently modeling the wrong accumulation length.  ``b`` may be
+    omitted (deprecation shim for the historical two-operand
+    signature), in which case ``a`` alone fixes ``K``.
+    """
+    k = int(a.shape[-1])
+    if b is not None:
+        kb = int(b.shape[-2]) if b.ndim >= 2 else int(b.shape[-1])
+        if kb != k:
+            raise ValueError(
+                f"contraction extents disagree: a has K={k} (shape "
+                f"{tuple(a.shape)}), b has K={kb} (shape "
+                f"{tuple(b.shape)})")
+    return splits_for_tolerance(target_rel, k, slice_bits)
 
 
 def measure_splits(a, b, target_rel: float, accumulator: str = "df32",

@@ -2,9 +2,11 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (AdaptiveGemm, estimate_rel_error, measure_splits,
-                        ozaki_matmul, predict_splits)
+                        ozaki_matmul, predict_splits,
+                        splits_for_tolerance)
 
 
 def _gauss(n, seed):
@@ -19,6 +21,23 @@ class TestPredict:
                   for tol in (1e-2, 1e-6, 1e-10, 1e-14)]
         assert splits == sorted(splits)
         assert splits[0] < splits[-1]
+
+    def test_uses_both_operands_k_extent(self):
+        # The error model depends on the shared contraction extent K;
+        # operands whose K extents disagree must be rejected instead of
+        # silently modeling a's alone (regression: b used to be dead).
+        a = jnp.ones((64, 256))
+        with pytest.raises(ValueError, match="disagree"):
+            predict_splits(a, jnp.ones((128, 64)), 1e-9)
+        s = predict_splits(a, jnp.ones((256, 64)), 1e-9)
+        assert s == predict_splits(a, None, 1e-9)  # deprecation shim
+        assert s == splits_for_tolerance(1e-9, k=256)
+
+    def test_shape_only_matches_operand_version(self):
+        a, b = _gauss(192, 14), _gauss(192, 15)
+        for tol in (1e-3, 1e-8, 1e-13):
+            assert predict_splits(a, b, tol) == \
+                splits_for_tolerance(tol, k=192)
 
     def test_model_is_conservative(self):
         # The a-priori bound must dominate the observed Gaussian error.

@@ -76,6 +76,15 @@ class TestEmulatedContour:
         with pytest.raises(ValueError):
             MU.run_contour(cfg, "fp32", system)
 
+    def test_any_registry_spec_is_a_mode(self, small):
+        # The mode string is now a backend spec: adaptive per-site
+        # tuning drives the same contour without further plumbing.
+        cfg, system = small
+        ref = MU.run_contour(cfg, "dgemm", system)
+        ada = MU.run_contour(cfg, "adaptive:1e-8", system)
+        err = MU.relative_errors(ref, ada)
+        assert err["max_real"] < 1e-5  # pole amplification over 1e-8
+
 
 class TestConfig:
     def test_block_must_divide_n(self):
