@@ -1,0 +1,147 @@
+"""Bench-regression gate: compare a quick-bench CSV against the baseline.
+
+Absolute microseconds are meaningless across machines (a laptop, this
+container, a GitHub runner), so the committed baseline stores *ratios*
+between a measured row and a native reference row from the same run —
+e.g. ``offload_steady_state / gemm_dgemm_256``, the steady-state cost
+of an offloaded emulated GEMM relative to the native matmul it
+replaces.  A gate fails when the current ratio exceeds the baseline
+ratio by more than the tolerance (default 25% — the ISSUE-3 bound on
+offload steady-state slowdown).
+
+Usage (what CI runs)::
+
+    PYTHONPATH=src python -m benchmarks.run --quick | tee quick-bench.csv
+    python -m benchmarks.compare_baseline quick-bench.csv
+
+Refresh the baseline after an intentional perf change with::
+
+    python -m benchmarks.compare_baseline quick-bench.csv --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline_quick.json"
+
+
+def parse_csv(path):
+    """CSV rows ``name,us_per_call,derived`` -> ``(times, derived)``.
+
+    ``times`` maps row name to microseconds; ``derived`` maps row name
+    to the parsed ``key=value`` pairs of the third column (values kept
+    as strings), so gates can check semantic fields like
+    ``offloaded_sites`` and not just wall time.
+    """
+    times, derived = {}, {}
+    for line in Path(path).read_text().splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            times[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+        if len(parts) == 3:
+            derived[parts[0]] = dict(
+                kv.split("=", 1) for kv in parts[2].split(";")
+                if "=" in kv)
+    return times, derived
+
+
+def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
+    """Returns (failures, report_lines); failures empty = gate passes."""
+    failures, report = [], []
+    derived = derived or {}
+    for name in baseline.get("required_rows", []):
+        if name not in rows:
+            failures.append(f"required row {name!r} missing from CSV "
+                            "(benchmark failed or was renamed)")
+    for check in baseline.get("derived_checks", []):
+        row, key = check["row"], check["key"]
+        val = derived.get(row, {}).get(key)
+        if val is None:
+            failures.append(f"derived check {row}:{key}: field missing")
+            continue
+        if float(val) < check["min"]:
+            failures.append(
+                f"REGRESSION {row}: {key}={val} < min {check['min']} "
+                "(sites silently fell back to native?)")
+        else:
+            report.append(f"ok {row}: {key}={val} >= {check['min']}")
+    tol = float(baseline.get("tolerance", 0.25))
+    for gate in baseline.get("gates", []):
+        metric, ref = gate["metric"], gate["reference"]
+        if metric not in rows or ref not in rows:
+            failures.append(f"gate {metric}/{ref}: row missing")
+            continue
+        if rows[ref] <= 0:
+            failures.append(f"gate {metric}/{ref}: reference is 0")
+            continue
+        ratio = rows[metric] / rows[ref]
+        limit = gate["max_ratio"] * (1.0 + tol)
+        line = (f"{metric}/{ref}: ratio {ratio:.2f} "
+                f"(baseline {gate['max_ratio']:.2f}, limit {limit:.2f})")
+        if ratio > limit:
+            failures.append(f"REGRESSION {line}")
+        else:
+            report.append(f"ok {line}")
+    return failures, report
+
+
+def update(rows: dict, baseline: dict) -> dict:
+    """Rewrite gate ratios from ``rows``; refuses incomplete CSVs so a
+    partially-failed run can never bake bogus ratios into the baseline."""
+    for gate in baseline.get("gates", []):
+        for name in (gate["metric"], gate["reference"]):
+            if name not in rows:
+                raise SystemExit(
+                    f"[bench-gate] cannot --update: row {name!r} "
+                    "missing from CSV (did its benchmark fail?)")
+        if rows[gate["reference"]] <= 0:
+            raise SystemExit(
+                f"[bench-gate] cannot --update: reference "
+                f"{gate['reference']!r} is 0")
+        gate["max_ratio"] = round(rows[gate["metric"]]
+                                  / rows[gate["reference"]], 3)
+    return baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", help="quick-bench CSV to check")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the baseline's tolerance")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline ratios from this CSV")
+    args = ap.parse_args(argv)
+
+    rows, derived = parse_csv(args.csv)
+    baseline = json.loads(Path(args.baseline).read_text())
+    if args.tolerance is not None:
+        baseline["tolerance"] = args.tolerance
+
+    if args.update:
+        Path(args.baseline).write_text(
+            json.dumps(update(rows, baseline), indent=2) + "\n")
+        print(f"[bench-gate] baseline updated: {args.baseline}")
+        return 0
+
+    failures, report = evaluate(rows, baseline, derived)
+    for line in report:
+        print(f"[bench-gate] {line}")
+    for line in failures:
+        print(f"[bench-gate] FAIL {line}", file=sys.stderr)
+    if failures:
+        return 1
+    print("[bench-gate] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

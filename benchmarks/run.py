@@ -217,9 +217,48 @@ def bench_roofline(quick: bool) -> list:
     return rows
 
 
+def bench_lm_step(quick: bool) -> list:
+    """LM train-step wall time per backend (tiny config, CPU).
+
+    The transformer workload through the same registry dispatch the
+    examples use: one full train step (loss forward + backward + AdamW)
+    native vs. offloaded at split 4/6.  The derived column carries the
+    offloaded-site count so a silent routing regression (sites falling
+    back to native) fails the bench-regression gate, not just the
+    timing.
+    """
+    from repro.configs import get_config
+    from repro.core import PrecisionPolicy, offload
+    from repro.launch.train import build_train_step
+    from repro.models import Model
+    from repro.train import AdamW, SyntheticText
+
+    cfg = get_config("tiny")
+    model = Model(cfg)
+    opt = AdamW(lr=3e-3)
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    batch = jnp.asarray(
+        SyntheticText(cfg.vocab_size, 64, 4, seed=0).batch(0))
+    step = build_train_step(model, opt)
+
+    us = _timeit(jax.jit(step), params, state, batch, reps=3)
+    rows = [f"lm_step_native,{us:.0f},tiny;tokens=256"]
+    for s in (4,) if quick else (4, 6):
+        pol = PrecisionPolicy(backend=f"fp64_int8_{s}",
+                              default_splits=s, min_dim=128)
+        wrapped = offload(step, pol)
+        n_on = sum(site.offloaded
+                   for site in wrapped.sites(params, state, batch))
+        us = _timeit(jax.jit(wrapped), params, state, batch, reps=3)
+        rows.append(f"lm_step_fp64_int8_{s},{us:.0f},"
+                    f"tiny;tokens=256;offloaded_sites={n_on}")
+    return rows
+
+
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
            bench_kernel_pallas, bench_intercept, bench_offload_batched,
-           bench_table1_must, bench_roofline]
+           bench_lm_step, bench_table1_must, bench_roofline]
 
 
 def main() -> None:

@@ -1,12 +1,15 @@
 """Serving example: batched requests through the continuous-batching engine.
 
-Loads the newest checkpoint from examples/train_lm.py if present (else
-random init), admits a batch of prompts, and decodes greedily — the same
-prefill/decode_step programs the decode_32k/long_500k dry-run cells lower
-at 512 devices.
+Loads the newest checkpoint written by examples/train_lm.py for the
+same ``--preset`` if present (else random init), admits a batch of
+prompts, and decodes greedily — the same prefill/decode_step programs
+the decode_32k/long_500k dry-run cells lower at 512 devices.
 
   PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --preset tiny
 """
+
+import argparse
 
 import jax
 import numpy as np
@@ -15,30 +18,40 @@ from repro.configs.base import get_config
 from repro.models.lm import Model
 from repro.serve.engine import Engine, Request
 from repro.train import checkpoint as CK
+from repro.train.optimizer import AdamW
 
-from train_lm import REDUCED_100M  # noqa: E402  (same reduced config)
+from train_lm import PRESETS, ckpt_dir_for  # noqa: E402  (same presets)
 
 
 def main():
-    cfg = get_config("smollm_360m").replace(**REDUCED_100M)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="reduced")
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    arch, overrides, _, _ = PRESETS[args.preset]
+    cfg = get_config(arch).replace(**overrides)
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    ckpt_dir = "runs/ckpt/smollm_360m"
+    ckpt_dir = ckpt_dir_for(args.preset)
     last = CK.latest_step(ckpt_dir)
     if last is not None:
         print(f"[serve] loading checkpoint step {last}")
-        opt_like = None
+        opt_like = AdamW().init(params)
         try:
-            from repro.train.optimizer import AdamW
-            opt_like = AdamW().init(params)
             params, _ = CK.restore(ckpt_dir, last, (params, opt_like))
-        except Exception as e:
+        except CK.CheckpointError as e:
+            # Only the narrow "checkpoint absent/incompatible" case
+            # falls back to random init; anything else is a real bug
+            # and propagates.
             print(f"[serve] restore failed ({e}); using random init")
 
     engine = Engine(model, params, batch_slots=4, max_len=512)
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, 16)),
-                    max_new_tokens=24) for _ in range(4)]
+    reqs = [Request(prompt=[int(t) for t in
+                            rng.integers(1, cfg.vocab_size, 16)],
+                    max_new_tokens=args.max_new_tokens)
+            for _ in range(4)]
     done = engine.run(reqs)
     for i, r in enumerate(done):
         print(f"[serve] req{i}: prompt[:4]={r.prompt[:4]} "

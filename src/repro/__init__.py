@@ -9,7 +9,15 @@ Package map:
   * ``repro.kernels``   — Pallas TPU kernels (interpret-mode on CPU);
   * ``repro.apps``      — paper workloads (MuST Green's-function
     contour study);
-  * ``repro.analysis``  — roofline analysis of dry-run artifacts.
+  * ``repro.analysis``  — roofline analysis of dry-run artifacts;
+  * ``repro.configs``   — frozen LM run configurations (presets);
+  * ``repro.models``    — llama-style decoder LM (scanned blocks,
+    KV-cache prefill/decode programs);
+  * ``repro.train``     — AdamW, deterministic synthetic data, atomic
+    bit-exact checkpointing;
+  * ``repro.launch``    — the resume-aware training loop (``--backend``
+    routes the whole step through the offload transform);
+  * ``repro.serve``     — continuous-batching greedy inference engine.
 """
 
 __version__ = "0.1.0"

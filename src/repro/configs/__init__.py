@@ -1,0 +1,6 @@
+"""repro.configs — named, frozen run configurations for the LM stack."""
+
+from .base import LMConfig, available_configs, get_config, register_config
+
+__all__ = ["LMConfig", "available_configs", "get_config",
+           "register_config"]

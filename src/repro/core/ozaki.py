@@ -148,7 +148,11 @@ def _accumulate_df32(prod, shifts, slice_bits, num_splits):
     """
     smax = num_splits - 1
     hi = prod.astype(jnp.float32)
-    lo = (prod - hi.astype(jnp.int64)).astype(jnp.float32)
+    # hi is integral and |prod| stays far below 2**31 for practical
+    # k/slice_bits, so casting back to the int32 input dtype is exact —
+    # and unlike int64 it does not warn when jax_enable_x64 is off
+    # (the LM examples train in pure float32 without x64).
+    lo = (prod - hi.astype(prod.dtype)).astype(jnp.float32)
     # Positive shifts: pair (i, j) gets weight 2**(w*(smax - i - j)).
     # Exact host-side powers of two (jnp.exp2 is approximate on CPU).
     w = np.ldexp(np.float32(1.0), (smax - np.asarray(shifts)) * slice_bits)

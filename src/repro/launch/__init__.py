@@ -1,0 +1,3 @@
+"""repro.launch — runnable entry points (training loop, etc.)."""
+
+__all__ = ["train"]

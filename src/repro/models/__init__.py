@@ -1,0 +1,5 @@
+"""repro.models — neural workloads built on the GEMM registry."""
+
+from .lm import Model
+
+__all__ = ["Model"]

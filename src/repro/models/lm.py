@@ -1,0 +1,294 @@
+"""Llama-style decoder-only LM as pure-JAX programs.
+
+Three programs over one parameter pytree:
+
+* :meth:`Model.apply` / :meth:`Model.loss` — full-context causal
+  forward (training).  Blocks are stacked along a leading layer axis
+  and run under ``jax.lax.scan`` (optionally rematerialized), so the
+  traced program is one block body — exactly the shape the automatic
+  offload transform (:mod:`repro.core.intercept`) descends into: the
+  projection/MLP/head matmuls appear as ``scan{i}/dot{j}`` sites and
+  get routed through the GEMM backend registry, while the attention
+  ``QK^T``/``AV`` contractions (``k = head_dim``) stay under the size
+  gate and run native.
+* :meth:`Model.prefill` — batched prompt ingestion into a fresh KV
+  cache (right-padded prompts, per-slot true lengths), returning the
+  last-real-token logits.
+* :meth:`Model.decode_step` — one greedy-decoding step against the
+  cache (one token per slot, per-slot positions).
+
+The cache layout is ``(num_layers, batch, kv_heads, max_len, head_dim)``
+so the layer axis lines up with the stacked block parameters and both
+cache-touching programs are the same ``scan``.
+
+No framework dependency (flax/optax are not in the container): params
+are plain dicts, initialization is explicit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import LMConfig
+
+__all__ = ["Model"]
+
+# Finite mask value: -inf breaks softmax rows that are fully masked
+# (inactive serve slots attend to nothing real); a large negative
+# float32 yields harmless uniform attention there instead of NaNs.
+_MASK_VALUE = -1e30
+
+
+def _rms_norm(x, weight, eps):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rope(x, positions, theta):
+    """Rotate half-dim pairs of ``x`` (..., T, H, head_dim).
+
+    ``positions`` is (..., T) — absolute positions, so cached keys and
+    fresh queries agree on the rotation regardless of where in the
+    sequence this call starts.
+    """
+    half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over the head axis
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def _sdpa(q, k, v, mask):
+    """Softmax(QK^T / sqrt(d)) V with a boolean keep-mask.
+
+    q: (B, T, H, d); k, v: (B, S, H, d); mask: (B, T, S) True = attend.
+    Scores are computed and normalized in float32.
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    scores = scores * scale
+    scores = jnp.where(mask[:, None, :, :], scores, _MASK_VALUE)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", attn.astype(v.dtype), v)
+    return out
+
+
+class Model:
+    """A decoder-only LM bound to an :class:`~repro.configs.LMConfig`.
+
+    All methods are pure functions of ``(params, ...)`` and safe to
+    ``jit`` / ``grad`` / wrap in :func:`repro.core.intercept.offload`.
+    """
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # -- parameters --------------------------------------------------
+
+    def init_params(self, rng) -> dict:
+        """Initialize the parameter pytree.
+
+        Projections get scaled-normal init; the LM head starts at zero
+        (untied), so the initial loss is exactly ``log(vocab)`` and the
+        first optimizer steps descend monotonically — which is what the
+        smoke examples assert.
+        """
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        L, d, f = cfg.num_layers, cfg.d_model, cfg.d_ff
+
+        def init(key, shape, scale):
+            w = scale * jax.random.normal(key, shape, dtype=jnp.float32)
+            return w.astype(self.param_dtype)
+
+        s_in = d ** -0.5
+        s_out = s_in / (2 * L) ** 0.5  # residual-branch damping
+        params = {
+            "embed": init(keys[0], (cfg.vocab_size, d), 0.02),
+            "blocks": {
+                "attn_norm": jnp.ones((L, d), self.param_dtype),
+                "wq": init(keys[1], (L, d, cfg.q_dim), s_in),
+                "wk": init(keys[2], (L, d, cfg.kv_dim), s_in),
+                "wv": init(keys[3], (L, d, cfg.kv_dim), s_in),
+                "wo": init(keys[4], (L, cfg.q_dim, d), s_out),
+                "mlp_norm": jnp.ones((L, d), self.param_dtype),
+                "w_gate": init(keys[5], (L, d, f), s_in),
+                "w_up": init(keys[6], (L, d, f), s_in),
+                "w_down": init(keys[7], (L, f, d), s_out),
+            },
+            "final_norm": jnp.ones((d,), self.param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jnp.zeros((d, cfg.vocab_size),
+                                          self.param_dtype)
+        return params
+
+    # -- shared block pieces -----------------------------------------
+
+    def _qkv(self, lp, x, positions):
+        """Project + reshape + rope.  x: (B, T, d) -> q/k/v heads."""
+        cfg = self.cfg
+        B, T = x.shape[:2]
+        h = _rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    def _attn_out(self, lp, x, o):
+        B, T = x.shape[:2]
+        o = o.reshape(B, T, self.cfg.q_dim)
+        return x + o @ lp["wo"]
+
+    def _mlp(self, lp, x):
+        h = _rms_norm(x, lp["mlp_norm"], self.cfg.norm_eps)
+        gate = jax.nn.silu((h @ lp["w_gate"]).astype(jnp.float32))
+        up = (h @ lp["w_up"]).astype(jnp.float32)
+        return x + ((gate * up).astype(x.dtype) @ lp["w_down"])
+
+    def _repeat_kv(self, kv):
+        """(B, S, KV, d) -> (B, S, H, d) for grouped-query attention."""
+        rep = self.cfg.num_heads // self.cfg.num_kv_heads
+        return jnp.repeat(kv, rep, axis=2) if rep > 1 else kv
+
+    def _head(self, params, x):
+        """Final norm + LM head on (..., d) activations."""
+        x = _rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return x @ head
+
+    # -- full-context forward (training) -----------------------------
+
+    def apply(self, params, tokens) -> jax.Array:
+        """Causal logits for ``tokens`` (B, T) -> (B, T, vocab)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        x = params["embed"][tokens].astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        causal = jnp.tril(jnp.ones((T, T), bool))
+        mask = jnp.broadcast_to(causal, (B, T, T))
+
+        def block(x, lp):
+            q, k, v = self._qkv(lp, x, positions)
+            o = _sdpa(q, self._repeat_kv(k), self._repeat_kv(v), mask)
+            x = self._attn_out(lp, x, o)
+            x = self._mlp(lp, x)
+            return x, None
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+        x, _ = jax.lax.scan(block, x, params["blocks"])
+        return self._head(params, x)
+
+    def loss(self, params, tokens) -> jax.Array:
+        """Mean causal cross-entropy over ``tokens`` (B, T+1)."""
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        logits = self.apply(params, inputs).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    # -- KV-cache programs (serving) ---------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        """Empty cache: stacked K/V buffers + per-slot lengths."""
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype),
+                "length": jnp.zeros((batch,), jnp.int32)}
+
+    def _cached_forward(self, params, cache, tokens, start):
+        """Shared prefill/decode body.
+
+        tokens: (B, T) new tokens; start: (B,) their first absolute
+        position (0 for prefill, current length for decode).  Writes
+        the new K/V at ``start..start+T-1`` per slot, attends over the
+        whole buffer under a key_pos <= query_pos mask, and returns
+        ``(new_cache_kv, hidden (B, T, d))``.
+        """
+        cfg = self.cfg
+        B, T = tokens.shape
+        S = cache["k"].shape[3]
+        x = params["embed"][tokens].astype(self.dtype)
+        positions = start[:, None] + jnp.arange(T)          # (B, T)
+        key_pos = jnp.arange(S)                             # (S,)
+        # Causal over absolute positions; anything above the query's
+        # position is either future or stale buffer garbage — masked.
+        mask = key_pos[None, None, :] <= positions[:, :, None]
+
+        def write(buf, new, p):
+            # buf: (KV, S, d); new: (T, KV, d); p: scalar start.  All
+            # three start indices must share p's dtype (int32) or x64
+            # mode promotes the literal zeros to int64.
+            zero = jnp.zeros((), p.dtype)
+            return jax.lax.dynamic_update_slice(
+                buf, jnp.moveaxis(new, 0, 1), (zero, p, zero))
+
+        def block(x, layer):
+            lp, k_buf, v_buf = layer
+            q, k, v = self._qkv(lp, x, positions)
+            k_buf = jax.vmap(write)(k_buf, k, start)
+            v_buf = jax.vmap(write)(v_buf, v, start)
+            k_all = jnp.moveaxis(k_buf, 1, 2)  # (B, S, KV, d)
+            v_all = jnp.moveaxis(v_buf, 1, 2)
+            o = _sdpa(q, self._repeat_kv(k_all), self._repeat_kv(v_all),
+                      mask)
+            x = self._attn_out(lp, x, o)
+            x = self._mlp(lp, x)
+            return x, (k_buf, v_buf)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (params["blocks"], cache["k"], cache["v"]))
+        return k_new, v_new, x
+
+    def prefill(self, params, tokens, lengths, max_len: int):
+        """Ingest right-padded prompts into a fresh cache.
+
+        tokens: (b, P) prompts padded to a common length P; lengths:
+        (b,) true prompt lengths.  Returns ``(cache, last_logits)``
+        where ``last_logits`` (b, vocab) are taken at each prompt's
+        final real token.  Padding positions do get written to the
+        buffer, but decode queries never attend past ``length`` and the
+        next decode write overwrites position ``length`` first.
+        """
+        b = tokens.shape[0]
+        cache = self.init_cache(b, max_len)
+        start = jnp.zeros((b,), jnp.int32)
+        k_new, v_new, x = self._cached_forward(params, cache, tokens,
+                                               start)
+        last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+        logits = self._head(params, last[:, 0, :])
+        return ({"k": k_new, "v": v_new,
+                 "length": lengths.astype(jnp.int32)}, logits)
+
+    def decode_step(self, params, cache, tokens, active):
+        """One decoding step: consume ``tokens`` (B,), emit next logits.
+
+        ``active`` (B, bool) gates the length bump so idle slots don't
+        creep toward the buffer end; their K/V writes land at their
+        stale ``length`` and are overwritten on the next admission.
+        """
+        start = cache["length"]
+        k_new, v_new, x = self._cached_forward(params, cache,
+                                               tokens[:, None], start)
+        logits = self._head(params, x[:, 0, :])
+        new_len = jnp.where(active, start + 1, start)
+        return ({"k": k_new, "v": v_new, "length": new_len}, logits)
+
+    def greedy(self, logits) -> jax.Array:
+        """Greedy token choice (B, vocab) -> (B,) int32."""
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)

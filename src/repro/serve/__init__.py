@@ -1,0 +1,5 @@
+"""repro.serve — continuous-batching inference on the KV-cache programs."""
+
+from .engine import Engine, Request
+
+__all__ = ["Engine", "Request"]

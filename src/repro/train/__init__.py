@@ -1,0 +1,8 @@
+"""repro.train — optimizer, synthetic data, checkpointing."""
+
+from . import checkpoint
+from .checkpoint import CheckpointError
+from .data import SyntheticText
+from .optimizer import AdamW
+
+__all__ = ["AdamW", "CheckpointError", "SyntheticText", "checkpoint"]

@@ -1,0 +1,88 @@
+"""Checkpointing: atomic, bit-exact pytree snapshots as ``.npz``.
+
+``save`` flattens the pytree and writes one compressed-free ``.npz``
+per step, through a temp file + ``os.replace`` so a killed run can
+never leave a half-written checkpoint behind — the resume path either
+sees a complete file or the previous step.  ``restore`` takes a
+structure-donor pytree (``like``) and validates leaf count, shapes and
+dtypes against it, raising :class:`CheckpointError` on any mismatch so
+callers can distinguish "no/incompatible checkpoint" (fall back to
+fresh init) from genuine bugs (propagate).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointError", "latest_step", "save", "restore"]
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is absent or does not match the expected pytree."""
+
+
+def _path(ckpt_dir, step: int) -> Path:
+    return Path(ckpt_dir) / f"step_{int(step):08d}.npz"
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    """Highest step with a complete checkpoint in ``ckpt_dir``, or None."""
+    d = Path(ckpt_dir)
+    if not d.is_dir():
+        return None
+    steps = [int(m.group(1)) for f in d.iterdir()
+             if (m := _STEP_RE.fullmatch(f.name))]
+    return max(steps) if steps else None
+
+
+def save(ckpt_dir, step: int, tree) -> Path:
+    """Write ``tree`` for ``step``; atomic within ``ckpt_dir``."""
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    payload = {f"leaf_{i:05d}": np.asarray(leaf)
+               for i, leaf in enumerate(leaves)}
+    final = _path(d, step)
+    tmp = final.with_name(final.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, final)  # atomic: readers never see a partial file
+    return final
+
+
+def restore(ckpt_dir, step: int, like):
+    """Load the ``step`` checkpoint into the structure of ``like``.
+
+    ``like`` supplies the treedef and the expected leaf shapes/dtypes
+    (e.g. freshly initialized ``(params, opt_state)``).  Raises
+    :class:`CheckpointError` if the file is missing or disagrees with
+    ``like`` in leaf count, shape, or dtype.
+    """
+    path = _path(ckpt_dir, step)
+    if not path.exists():
+        raise CheckpointError(f"no checkpoint at {path}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    with np.load(path) as data:
+        keys = sorted(data.files)
+        if len(keys) != len(leaves_like):
+            raise CheckpointError(
+                f"{path} holds {len(keys)} leaves, expected "
+                f"{len(leaves_like)} — architecture/optimizer mismatch")
+        loaded = []
+        for key, ref in zip(keys, leaves_like):
+            arr = data[key]
+            ref = np.asarray(ref)
+            if arr.shape != ref.shape or arr.dtype != ref.dtype:
+                raise CheckpointError(
+                    f"{path}:{key} is {arr.dtype}{list(arr.shape)}, "
+                    f"expected {ref.dtype}{list(ref.shape)}")
+            loaded.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, loaded)

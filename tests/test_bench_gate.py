@@ -1,0 +1,93 @@
+"""Unit tests for the CI bench-regression gate (pure logic, no JAX)."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare_baseline import evaluate, parse_csv, update  # noqa: E402
+
+BASELINE = {
+    "tolerance": 0.25,
+    "gates": [{"metric": "emul", "reference": "native",
+               "max_ratio": 10.0}],
+    "required_rows": ["native", "emul"],
+}
+
+
+def test_parse_csv(tmp_path):
+    p = tmp_path / "bench.csv"
+    p.write_text("name,us_per_call,derived\n"
+                 "native,100,x\n"
+                 "emul,1000,a=b;sites=18\n"
+                 "weird_row_no_number,abc,z\n")
+    rows, derived = parse_csv(p)
+    assert rows == {"native": 100.0, "emul": 1000.0}
+    assert derived["emul"] == {"a": "b", "sites": "18"}
+
+
+def test_gate_passes_within_tolerance():
+    failures, report = evaluate({"native": 100.0, "emul": 1200.0},
+                                BASELINE)
+    assert not failures and len(report) == 1  # 12.0 <= 10.0 * 1.25
+
+
+def test_gate_fails_beyond_tolerance():
+    failures, _ = evaluate({"native": 100.0, "emul": 1300.0}, BASELINE)
+    assert any("REGRESSION" in f for f in failures)  # 13.0 > 12.5
+
+
+def test_missing_required_row_fails():
+    failures, _ = evaluate({"native": 100.0}, BASELINE)
+    assert any("emul" in f for f in failures)
+
+
+def test_zero_reference_fails_loud():
+    failures, _ = evaluate({"native": 0.0, "emul": 1.0}, BASELINE)
+    assert any("reference is 0" in f for f in failures)
+
+
+def test_update_rewrites_ratios():
+    b = json.loads(json.dumps(BASELINE))
+    update({"native": 100.0, "emul": 1500.0}, b)
+    assert b["gates"][0]["max_ratio"] == 15.0
+
+
+def test_update_refuses_incomplete_csv():
+    with pytest.raises(SystemExit, match="missing"):
+        update({"native": 100.0}, json.loads(json.dumps(BASELINE)))
+    with pytest.raises(SystemExit, match="is 0"):
+        update({"native": 0.0, "emul": 1.0},
+               json.loads(json.dumps(BASELINE)))
+
+
+def test_derived_check_gates_site_count():
+    base = json.loads(json.dumps(BASELINE))
+    base["derived_checks"] = [
+        {"row": "emul", "key": "offloaded_sites", "min": 18}]
+    rows = {"native": 100.0, "emul": 1000.0}
+    ok, _ = evaluate(rows, base, {"emul": {"offloaded_sites": "18"}})
+    assert not ok
+    dropped, _ = evaluate(rows, base,
+                          {"emul": {"offloaded_sites": "0"}})
+    assert any("fell back to native" in f for f in dropped)
+    missing, _ = evaluate(rows, base, {})
+    assert any("field missing" in f for f in missing)
+
+
+def test_committed_baseline_is_well_formed():
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "benchmarks" / "baseline_quick.json")
+    baseline = json.loads(path.read_text())
+    assert 0 < baseline["tolerance"] <= 1
+    assert baseline["gates"], "baseline must gate something"
+    for gate in baseline["gates"]:
+        assert gate["max_ratio"] > 0
+        assert {"metric", "reference"} <= set(gate)
+        # every gated row must also be required, so a silently-missing
+        # row cannot skip its gate
+        assert gate["metric"] in baseline["required_rows"]
+        assert gate["reference"] in baseline["required_rows"]

@@ -1,0 +1,148 @@
+"""Model + config tests: shapes, causality, cache/forward agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LMConfig, get_config
+from repro.models import Model
+
+# A deliberately small config so each test runs in well under a second.
+SMALL = LMConfig(name="test_small", vocab_size=128, num_layers=2,
+                 d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                 d_ff=128, max_seq_len=64)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    model = Model(SMALL)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # Non-zero head so logits (and greedy choices) are token-dependent.
+    params["lm_head"] = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), params["lm_head"].shape,
+        dtype=jnp.float32)
+    return model, params
+
+
+def _tokens(rng, b, t, vocab=SMALL.vocab_size):
+    return jnp.asarray(rng.integers(0, vocab, (b, t)), jnp.int32)
+
+
+class TestConfig:
+    def test_presets_resolve(self):
+        cfg = get_config("smollm_360m")
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+        assert get_config("tiny").num_layers == 2
+
+    def test_unknown_preset_raises(self):
+        with pytest.raises(ValueError, match="unknown config"):
+            get_config("nope")
+
+    def test_replace_and_validation(self):
+        cfg = get_config("tiny").replace(num_layers=3)
+        assert cfg.num_layers == 3
+        assert get_config("tiny").num_layers == 2  # frozen original
+        with pytest.raises(ValueError, match="multiple"):
+            get_config("tiny").replace(num_heads=3, num_kv_heads=2)
+
+    def test_num_params_matches_init(self):
+        model = Model(SMALL)
+        params = model.init_params(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree_util.tree_leaves(params))
+        assert actual == SMALL.num_params()
+
+    def test_num_params_tied(self):
+        cfg = SMALL.replace(tie_embeddings=True)
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        assert "lm_head" not in params
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree_util.tree_leaves(params))
+        assert actual == cfg.num_params()
+
+
+class TestForward:
+    def test_logits_shape_and_dtype(self, small_model):
+        model, params = small_model
+        toks = _tokens(np.random.default_rng(0), 2, 10)
+        logits = model.apply(params, toks)
+        assert logits.shape == (2, 10, SMALL.vocab_size)
+        assert logits.dtype == jnp.float32
+
+    def test_initial_loss_is_log_vocab(self):
+        # Zero-initialized head -> exactly uniform predictions.
+        model = Model(SMALL)
+        params = model.init_params(jax.random.PRNGKey(0))
+        toks = _tokens(np.random.default_rng(1), 2, 17)
+        loss = model.loss(params, toks)
+        assert np.isclose(float(loss), np.log(SMALL.vocab_size),
+                          rtol=1e-6)
+
+    def test_causality(self, small_model):
+        """Changing token t+1.. must not change logits at position t."""
+        model, params = small_model
+        rng = np.random.default_rng(2)
+        toks = _tokens(rng, 1, 12)
+        base = model.apply(params, toks)
+        perturbed = toks.at[0, 7:].set(
+            (toks[0, 7:] + 1) % SMALL.vocab_size)
+        got = model.apply(params, perturbed)
+        np.testing.assert_allclose(got[0, :7], base[0, :7], atol=1e-6)
+        assert not np.allclose(got[0, 7:], base[0, 7:], atol=1e-6)
+
+    def test_remat_matches_plain(self, small_model):
+        model, params = small_model
+        toks = _tokens(np.random.default_rng(3), 2, 9)
+        rm = Model(SMALL.replace(remat=True))
+        np.testing.assert_allclose(rm.apply(params, toks),
+                                   model.apply(params, toks),
+                                   atol=1e-6)
+
+    def test_tied_embeddings_forward(self):
+        model = Model(SMALL.replace(tie_embeddings=True))
+        params = model.init_params(jax.random.PRNGKey(4))
+        toks = _tokens(np.random.default_rng(4), 1, 6)
+        logits = model.apply(params, toks)
+        assert logits.shape == (1, 6, SMALL.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestKVCache:
+    def test_prefill_matches_full_forward(self, small_model):
+        model, params = small_model
+        toks = _tokens(np.random.default_rng(5), 3, 11)
+        full = model.apply(params, toks)
+        lengths = jnp.full((3,), 11, jnp.int32)
+        _, last = model.prefill(params, toks, lengths, max_len=32)
+        np.testing.assert_allclose(last, full[:, -1], atol=1e-5)
+
+    def test_ragged_prefill_ignores_padding(self, small_model):
+        """Right-padded junk must not leak into the last-token logits."""
+        model, params = small_model
+        rng = np.random.default_rng(6)
+        real = _tokens(rng, 1, 7)
+        padded = jnp.concatenate(
+            [real, _tokens(rng, 1, 5)], axis=1)  # junk tail
+        _, last_ragged = model.prefill(
+            params, padded, jnp.array([7], jnp.int32), max_len=32)
+        _, last_exact = model.prefill(
+            params, real, jnp.array([7], jnp.int32), max_len=32)
+        np.testing.assert_allclose(last_ragged, last_exact, atol=1e-6)
+
+    def test_decode_chain_matches_full_forward(self, small_model):
+        model, params = small_model
+        toks = _tokens(np.random.default_rng(7), 2, 8)
+        lengths = jnp.full((2,), 8, jnp.int32)
+        cache, logits = model.prefill(params, toks, lengths, max_len=32)
+        seq = toks
+        for _ in range(4):
+            nxt = model.greedy(logits)
+            seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+            cache, logits = model.decode_step(
+                params, cache, nxt, jnp.array([True, True]))
+            full = model.apply(params, seq)
+            np.testing.assert_allclose(logits, full[:, -1], atol=1e-4)
+            assert np.array_equal(model.greedy(logits),
+                                  model.greedy(full[:, -1]))

@@ -1,0 +1,179 @@
+"""Train-subsystem tests: optimizer, data, checkpointing, offload routing."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LMConfig
+from repro.core import PrecisionPolicy, offload
+from repro.launch.train import build_train_step, main as train_main
+from repro.models import Model
+from repro.train import AdamW, CheckpointError, SyntheticText, checkpoint
+
+SMALL = LMConfig(name="test_small", vocab_size=128, num_layers=1,
+                 d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+                 d_ff=128)
+
+# Overrides for driving launch.train's CLI at test scale.
+_CLI_OVERRIDES = json.dumps({
+    "num_layers": 1, "d_model": 64, "num_heads": 2, "num_kv_heads": 1,
+    "head_dim": 32, "d_ff": 128, "vocab_size": 128})
+
+
+def _cli(steps, ckpt_dir, ckpt_every=3):
+    return ["--arch", "tiny", "--overrides", _CLI_OVERRIDES,
+            "--steps", str(steps), "--seq-len", "16",
+            "--global-batch", "2", "--ckpt-dir", str(ckpt_dir),
+            "--ckpt-every", str(ckpt_every), "--log-every", "100"]
+
+
+def _assert_trees_bit_identical(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+class TestSyntheticText:
+    def test_deterministic_per_step(self):
+        d = SyntheticText(128, 16, 4, seed=7)
+        np.testing.assert_array_equal(d.batch(3), d.batch(3))
+        assert not np.array_equal(d.batch(3), d.batch(4))
+        d2 = SyntheticText(128, 16, 4, seed=8)
+        assert not np.array_equal(d.batch(3), d2.batch(3))
+
+    def test_shape_and_range(self):
+        b = SyntheticText(128, 16, 4, seed=0).batch(0)
+        assert b.shape == (4, 17) and b.dtype == np.int32
+        assert b.min() >= 0 and b.max() < 128
+
+    def test_anchor_skews_marginal(self):
+        b = SyntheticText(128, 64, 8, seed=0).batch(0)
+        assert (b == 0).mean() > 0.1  # the learnable unigram signal
+
+
+class TestAdamW:
+    def test_update_moves_params_and_counts(self):
+        opt = AdamW(lr=1e-2)
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        state = opt.init(params)
+        grads = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+        p2, s2 = opt.update(grads, params, state)
+        assert int(s2["step"]) == 1
+        assert not np.allclose(p2["w"], params["w"])
+        assert p2["w"].dtype == params["w"].dtype
+
+    def test_training_reduces_loss(self):
+        model = Model(SMALL)
+        opt = AdamW(lr=3e-3)
+        params = model.init_params(jax.random.PRNGKey(0))
+        state = opt.init(params)
+        data = SyntheticText(SMALL.vocab_size, 32, 4, seed=0)
+        step = jax.jit(build_train_step(model, opt))
+        losses = []
+        for i in range(8):
+            params, state, loss = step(params, state,
+                                       jnp.asarray(data.batch(i)))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        assert losses[0] == pytest.approx(np.log(SMALL.vocab_size),
+                                          rel=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip_bit_identical(self, tmp_path):
+        tree = {"a": jnp.asarray(np.random.default_rng(0)
+                                 .standard_normal((3, 5)), jnp.float32),
+                "b": {"c": jnp.arange(4, dtype=jnp.int32)}}
+        checkpoint.save(tmp_path, 10, tree)
+        got = checkpoint.restore(tmp_path, 10, tree)
+        _assert_trees_bit_identical(tree, got)
+
+    def test_latest_step(self, tmp_path):
+        assert checkpoint.latest_step(tmp_path / "absent") is None
+        tree = {"x": jnp.zeros((2,))}
+        checkpoint.save(tmp_path, 3, tree)
+        checkpoint.save(tmp_path, 12, tree)
+        assert checkpoint.latest_step(tmp_path) == 12
+
+    def test_missing_step_raises(self, tmp_path):
+        with pytest.raises(CheckpointError, match="no checkpoint"):
+            checkpoint.restore(tmp_path, 1, {"x": jnp.zeros((2,))})
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        checkpoint.save(tmp_path, 1, {"x": jnp.zeros((2,))})
+        with pytest.raises(CheckpointError, match="expected"):
+            checkpoint.restore(tmp_path, 1, {"x": jnp.zeros((3,))})
+        with pytest.raises(CheckpointError, match="leaves"):
+            checkpoint.restore(tmp_path, 1,
+                               {"x": jnp.zeros((2,)),
+                                "y": jnp.zeros((2,))})
+
+    def test_kill_and_resume_bit_identical(self, tmp_path):
+        """3 steps + resume to 6 == uninterrupted 6, to the bit."""
+        dir_a, dir_b = tmp_path / "a", tmp_path / "b"
+        train_main(_cli(6, dir_a))
+        losses_first = train_main(_cli(3, dir_b))
+        losses_resumed = train_main(_cli(6, dir_b))  # resumes at 3
+        assert len(losses_first) == 3 and len(losses_resumed) == 3
+        assert checkpoint.latest_step(dir_a) == 6
+        assert checkpoint.latest_step(dir_b) == 6
+        a = np.load(dir_a / "step_00000006.npz")
+        b = np.load(dir_b / "step_00000006.npz")
+        assert a.files == b.files
+        for key in a.files:
+            assert a[key].tobytes() == b[key].tobytes(), key
+
+    def test_resume_past_target_is_noop(self, tmp_path):
+        d = tmp_path / "c"
+        train_main(_cli(2, d, ckpt_every=10))
+        assert train_main(_cli(2, d, ckpt_every=10)) == []
+
+
+class TestOffloadTraining:
+    """The acceptance criterion: a train step's GEMMs route through the
+    registry backend, forward and backward, inside the scan bodies."""
+
+    def _setup(self):
+        model = Model(SMALL)
+        opt = AdamW(lr=3e-3)
+        params = model.init_params(jax.random.PRNGKey(0))
+        state = opt.init(params)
+        batch = jnp.asarray(
+            SyntheticText(SMALL.vocab_size, 32, 4, seed=0).batch(0))
+        return model, opt, params, state, batch
+
+    def test_sites_cover_forward_and_backward_scans(self):
+        model, opt, params, state, batch = self._setup()
+        pol = PrecisionPolicy(backend="fp64_int8_4", min_dim=32)
+        wrapped = offload(build_train_step(model, opt), pol)
+        sites = wrapped.sites(params, state, batch)
+        on = [s for s in sites if s.offloaded]
+        assert len(on) >= 10
+        prefixes = {s.name.split("/")[0] for s in on if "/" in s.name}
+        # value_and_grad of a scanned model yields (at least) a forward
+        # and a backward scan, and both must carry offloaded sites.
+        assert len(prefixes) >= 2, prefixes
+
+    def test_emulated_step_matches_native(self):
+        model, opt, params, state, batch = self._setup()
+        step = build_train_step(model, opt)
+        _, _, loss_native = jax.jit(step)(params, state, batch)
+        pol = PrecisionPolicy(backend="fp64_int8_4", min_dim=32)
+        wrapped = jax.jit(offload(step, pol))
+        p_e, s_e, loss_emul = wrapped(params, state, batch)
+        assert float(loss_emul) == pytest.approx(float(loss_native),
+                                                 abs=1e-4)
+        # and the updated params stay close, i.e. the backward GEMMs
+        # were emulated correctly, not skipped
+        for le, ln in zip(jax.tree_util.tree_leaves(p_e),
+                          jax.tree_util.tree_leaves(
+                              jax.jit(step)(params, state, batch)[0])):
+            np.testing.assert_allclose(np.asarray(le), np.asarray(ln),
+                                       atol=5e-4)
