@@ -53,8 +53,21 @@ def parse_csv(path):
     return times, derived
 
 
+def _is_skip_row(name: str, derived: dict) -> bool:
+    """A row a benchmark degraded to instead of failing outright
+    (``xxx,0,skipped=...`` or an explicit ``*_skipped`` name)."""
+    return "skipped" in derived.get(name, {}) or name.endswith("_skipped")
+
+
 def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
-    """Returns (failures, report_lines); failures empty = gate passes."""
+    """Returns (failures, report_lines); failures empty = gate passes.
+
+    Every malformed/degraded input — a missing or zero or skip-row
+    reference, a non-numeric derived field, a gate or check entry
+    without its keys — produces a *named* failure line instead of an
+    uncaught ``ZeroDivisionError``/``KeyError``, so a degraded bench
+    run fails CI with a message that says which gate and why.
+    """
     failures, report = [], []
     derived = derived or {}
     for name in baseline.get("required_rows", []):
@@ -62,12 +75,23 @@ def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
             failures.append(f"required row {name!r} missing from CSV "
                             "(benchmark failed or was renamed)")
     for check in baseline.get("derived_checks", []):
-        row, key = check["row"], check["key"]
+        row, key = check.get("row"), check.get("key")
+        if row is None or key is None or "min" not in check:
+            failures.append(f"derived check malformed in baseline "
+                            f"(needs row/key/min): {check!r}")
+            continue
         val = derived.get(row, {}).get(key)
         if val is None:
             failures.append(f"derived check {row}:{key}: field missing")
             continue
-        if float(val) < check["min"]:
+        try:
+            num = float(val)
+        except ValueError:
+            failures.append(f"derived check {row}:{key}: value "
+                            f"{val!r} is not numeric (degraded bench "
+                            "run?)")
+            continue
+        if num < check["min"]:
             failures.append(
                 f"REGRESSION {row}: {key}={val} < min {check['min']} "
                 "(sites silently fell back to native?)")
@@ -75,9 +99,19 @@ def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
             report.append(f"ok {row}: {key}={val} >= {check['min']}")
     tol = float(baseline.get("tolerance", 0.25))
     for gate in baseline.get("gates", []):
-        metric, ref = gate["metric"], gate["reference"]
+        metric, ref = gate.get("metric"), gate.get("reference")
+        if metric is None or ref is None or "max_ratio" not in gate:
+            failures.append(f"gate malformed in baseline (needs "
+                            f"metric/reference/max_ratio): {gate!r}")
+            continue
         if metric not in rows or ref not in rows:
             failures.append(f"gate {metric}/{ref}: row missing")
+            continue
+        skipped = [n for n in (metric, ref) if _is_skip_row(n, derived)]
+        if skipped:
+            failures.append(
+                f"gate {metric}/{ref}: {', '.join(skipped)} is a skip "
+                "row from a degraded bench run — no timing to compare")
             continue
         if rows[ref] <= 0:
             failures.append(f"gate {metric}/{ref}: reference is 0")
@@ -93,15 +127,24 @@ def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
     return failures, report
 
 
-def update(rows: dict, baseline: dict) -> dict:
+def update(rows: dict, baseline: dict,
+           derived: dict | None = None) -> dict:
     """Rewrite gate ratios from ``rows``; refuses incomplete CSVs so a
     partially-failed run can never bake bogus ratios into the baseline."""
+    derived = derived or {}
     for gate in baseline.get("gates", []):
+        if gate.get("metric") is None or gate.get("reference") is None:
+            raise SystemExit(f"[bench-gate] cannot --update: gate "
+                             f"malformed in baseline: {gate!r}")
         for name in (gate["metric"], gate["reference"]):
             if name not in rows:
                 raise SystemExit(
                     f"[bench-gate] cannot --update: row {name!r} "
                     "missing from CSV (did its benchmark fail?)")
+            if _is_skip_row(name, derived):
+                raise SystemExit(
+                    f"[bench-gate] cannot --update: row {name!r} is a "
+                    "skip row from a degraded bench run")
         if rows[gate["reference"]] <= 0:
             raise SystemExit(
                 f"[bench-gate] cannot --update: reference "
@@ -128,7 +171,7 @@ def main(argv=None) -> int:
 
     if args.update:
         Path(args.baseline).write_text(
-            json.dumps(update(rows, baseline), indent=2) + "\n")
+            json.dumps(update(rows, baseline, derived), indent=2) + "\n")
         print(f"[bench-gate] baseline updated: {args.baseline}")
         return 0
 

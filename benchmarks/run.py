@@ -189,6 +189,56 @@ def bench_offload_batched(quick: bool) -> list:
     ]
 
 
+def bench_offload_sharded(quick: bool) -> list:
+    """Sharded (shard_map) offload: the multi-device dispatch path.
+
+    A data-parallel GEMM chain under ``shard_map`` over every visible
+    device (1 on a plain runner, 8 under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), offloaded
+    through the registry.  The derived column carries the offloaded-
+    site count so sharded sites silently falling back to native fail
+    the bench-regression gate, not just the timing.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import PrecisionPolicy, offload
+    from repro.shard import build_mesh
+
+    ndev = jax.device_count()
+    mesh = build_mesh(f"dp={ndev}")
+    n = 192 if quick else 384
+    rows_per_shard = 128
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.standard_normal((ndev * rows_per_shard, n)))
+    b = jnp.asarray(rng.standard_normal((n, n)))
+
+    def fn(a, b):
+        def per_shard(a_s, b_s):
+            return jnp.tanh(a_s @ b_s) @ b_s
+
+        return shard_map(per_shard, mesh=mesh,
+                         in_specs=(P("dp"), P(None)),
+                         out_specs=P("dp"))(a, b)
+
+    pol = PrecisionPolicy(default_splits=6, min_dim=64,
+                          accumulator="f64")
+    wrapped = offload(fn, pol)
+    n_on = sum(s.offloaded for s in wrapped.sites(a, b))
+    emul = jax.jit(wrapped)
+    native = jax.jit(fn)
+    ref = native(a, b)
+    err = float(jnp.max(jnp.abs(emul(a, b) - ref))
+                / jnp.max(jnp.abs(ref)))
+    us_emul = _timeit(emul, a, b)
+    us_nat = _timeit(native, a, b)
+    return [
+        f"offload_sharded_int8_6,{us_emul:.0f},"
+        f"devices={ndev};n={n};offloaded_sites={n_on};maxrel={err:.3e}",
+        f"offload_sharded_native,{us_nat:.0f},devices={ndev};n={n}",
+    ]
+
+
 def bench_roofline(quick: bool) -> list:
     """§Roofline summary from the dry-run artifacts (if present)."""
     try:
@@ -258,7 +308,8 @@ def bench_lm_step(quick: bool) -> list:
 
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
            bench_kernel_pallas, bench_intercept, bench_offload_batched,
-           bench_lm_step, bench_table1_must, bench_roofline]
+           bench_offload_sharded, bench_lm_step, bench_table1_must,
+           bench_roofline]
 
 
 def main() -> None:

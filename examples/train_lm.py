@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--global-batch", type=int, default=0,
                     help="0 = preset default")
     ap.add_argument("--backend", default="")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 'dp=8' (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 "
+                         "on CPU)")
     args = ap.parse_args()
 
     arch, overrides, seq_len, batch = PRESETS[args.preset]
@@ -60,6 +64,8 @@ def main():
             "--log-every", "10"]
     if args.backend:
         argv += ["--backend", args.backend]
+    if args.mesh:
+        argv += ["--mesh", args.mesh]
     losses = train_main(argv)
     if len(losses) >= 2:
         assert losses[-1] < losses[0], "loss did not improve"

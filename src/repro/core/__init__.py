@@ -12,7 +12,8 @@ Layers:
 
 from .backends import (GemmBackend, example_specs, get_backend,
                        register_backend, registered_families)
-from .intercept import Site, offload, site_report, transform_jaxpr
+from .intercept import (CacheInfo, Site, offload, site_report,
+                        transform_jaxpr)
 from .ozaki import (SLICE_BITS, num_pair_gemms, ozaki_matmul,
                     pair_indices, slice_matrix)
 from .precision import (AdaptiveGemm, PrecisionPolicy, SiteState,
@@ -22,6 +23,7 @@ from .precision import (AdaptiveGemm, PrecisionPolicy, SiteState,
 __all__ = [
     "SLICE_BITS",
     "AdaptiveGemm",
+    "CacheInfo",
     "GemmBackend",
     "PrecisionPolicy",
     "Site",

@@ -19,6 +19,20 @@ What the transform covers:
   are inlined transparently;
 * sites inside ``scan`` / ``while`` / ``cond`` bodies, which are
   rebuilt with transformed bodies;
+* sites inside ``shard_map`` / ``pmap`` bodies (multi-device SPMD):
+  the body is rebuilt around the rewriter under the same mesh and
+  partition specs (``check_rep=False``); collective-adjacent equations
+  are canonicalized — plain collectives re-bind as-is, while the
+  replication-rewrite artifacts are undone (``pbroadcast`` dropped,
+  ``psum2`` -> ``lax.psum``; replaying them verbatim corrupts the
+  transpose rule) — and the size gate sees the *per-shard* operand
+  shapes, so every device runs the same Ozaki split schedule a
+  single-device run would;
+* ``jit``-ted inner functions with ``NamedSharding``-annotated
+  arguments: the ``pjit`` body is inlined for site discovery and its
+  in/out shardings are re-applied as ``with_sharding_constraint``, so
+  the transformed program still partitions the same way under
+  ``jax.jit``;
 * reverse-mode AD: each offloaded site carries a ``custom_vjp`` whose
   backward pass runs the *same* backend on the transposed operands
   ("emulated backward"), so ``jax.grad`` works through offloaded code.
@@ -30,8 +44,9 @@ derivative rule — so their internal matmuls stay native.
 Site naming is structural and **shared verbatim** between
 :func:`site_report` and :func:`offload`: ``dot{i}`` numbers the
 ``dot_general`` sites of a scope in program order (call-like primitives
-are inlined into the enclosing scope), and control-flow bodies extend
-the path — ``scan0/dot1``, ``while2/cond/dot0``, ``cond1/br0/dot0``.
+are inlined into the enclosing scope), and control-flow/SPMD bodies
+extend the path — ``scan0/dot1``, ``while2/cond/dot0``,
+``cond1/br0/dot0``, ``shmap0/dot1``, ``pmap0/scan0/dot0``.
 ``PrecisionPolicy.site_splits`` keys against exactly these names, which
 is the paper's "enumerate first, then tune per site" workflow.
 
@@ -54,6 +69,7 @@ Public API
 from __future__ import annotations
 
 import math
+from collections import OrderedDict, namedtuple
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
@@ -68,7 +84,8 @@ except ImportError:  # pragma: no cover - older jax
 from .backends import GemmBackend, get_backend
 from .precision import PrecisionPolicy
 
-__all__ = ["offload", "site_report", "transform_jaxpr", "Site"]
+__all__ = ["offload", "site_report", "transform_jaxpr", "Site",
+           "CacheInfo", "OFFLOAD_CACHE_SIZE"]
 
 # Call-like primitives whose body jaxpr is inlined into the enclosing
 # scope: they neither change shapes nor iterate, so their sites share
@@ -139,6 +156,19 @@ def _walk_sites(jaxpr, prefix: str = "", dot_counter=None,
         elif prim in _INLINE_PRIMITIVES:
             for sub, _ in _subjaxprs(eqn):
                 _walk_sites(sub, prefix, dot_counter, flow_counter, out)
+        elif prim == "shard_map":
+            # The body sees *per-shard* shapes: sites inside get their
+            # offload decision (and size gate) against the local block,
+            # so the per-device Ozaki schedule matches a single-device
+            # run on one shard.
+            _walk_sites(eqn.params["jaxpr"],
+                        f"{prefix}shmap{flow_counter[0]}/", out=out)
+            flow_counter[0] += 1
+        elif prim == "xla_pmap":
+            body = eqn.params["call_jaxpr"]
+            _walk_sites(getattr(body, "jaxpr", body),
+                        f"{prefix}pmap{flow_counter[0]}/", out=out)
+            flow_counter[0] += 1
         elif prim == "scan":
             body = eqn.params["jaxpr"]
             _walk_sites(body.jaxpr, f"{prefix}scan{flow_counter[0]}/",
@@ -331,6 +361,14 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
                 else:
                     outvals = [eqn.primitive.bind(*invals, **eqn.params)]
             elif prim in _INLINE_PRIMITIVES:
+                # Inlining a pjit discards its partitioning params, so
+                # NamedSharding annotations on the inner jit are
+                # re-applied as sharding constraints around the inlined
+                # body — offload(jax.jit(fn, in_shardings=...)) keeps
+                # partitioning exactly as the user declared it.
+                if prim == "pjit":
+                    invals = _apply_shardings(
+                        invals, eqn.params.get("in_shardings"))
                 outvals = None
                 for sub, sub_consts in _subjaxprs(eqn):
                     outvals = eval_rewritten(sub, sub_consts, invals,
@@ -340,6 +378,35 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
                     outvals = eqn.primitive.bind(*invals, **eqn.params)
                     if not eqn.primitive.multiple_results:
                         outvals = [outvals]
+                elif prim == "pjit":
+                    outvals = _apply_shardings(
+                        outvals, eqn.params.get("out_shardings"))
+            elif prim == "shard_map":
+                pfx = f"{prefix}shmap{flow_counter[0]}/"
+                flow_counter[0] += 1
+                outvals = _eval_shard_map(eqn, invals, eval_rewritten,
+                                          pfx)
+            elif prim == "xla_pmap":
+                pfx = f"{prefix}pmap{flow_counter[0]}/"
+                flow_counter[0] += 1
+                outvals = _eval_pmap(eqn, invals, eval_rewritten, pfx)
+            elif prim == "pbroadcast":
+                # shard_map's replication-tracking rewrite (check_rep)
+                # stages pbroadcast markers into the body; they are
+                # physically the identity, and replaying them under the
+                # check_rep=False rebuild corrupts the transpose rule —
+                # drop them.
+                outvals = list(invals)
+            elif prim == "psum2":
+                # Same story for psum2 (the rewritten psum): replay it
+                # as the plain collective so values AND cotangents come
+                # out right under the check_rep=False rebuild.
+                outvals = [
+                    jax.lax.psum(
+                        x, tuple(eqn.params["axes"]),
+                        axis_index_groups=eqn.params.get(
+                            "axis_index_groups"))
+                    for x in invals]
             elif prim == "scan":
                 pfx = f"{prefix}scan{flow_counter[0]}/"
                 flow_counter[0] += 1
@@ -434,6 +501,76 @@ def _eval_cond(eqn, invals, eval_body, prefix):
         *operands))
 
 
+def _apply_shardings(vals, shardings):
+    """Constrain ``vals`` to the concrete shardings of a pjit eqn.
+
+    Entries that are not actual :class:`jax.sharding.Sharding` objects
+    (``UnspecifiedValue`` placeholders from a plain ``jax.jit``) leave
+    the value untouched.
+    """
+    if shardings is None:
+        return vals
+    out = []
+    for val, sh in zip(vals, shardings):
+        if isinstance(sh, jax.sharding.Sharding):
+            val = jax.lax.with_sharding_constraint(val, sh)
+        out.append(val)
+    return out
+
+
+def _names_to_specs(names_seq, var_seq):
+    """shard_map ``in_names``/``out_names`` dicts -> PartitionSpecs."""
+    return tuple(
+        jax.sharding.PartitionSpec(
+            *[names.get(d) for d in range(v.aval.ndim)])
+        for names, v in zip(names_seq, var_seq))
+
+
+def _eval_shard_map(eqn, invals, eval_body, prefix):
+    """Rebuild a ``shard_map`` with its body routed through the rewriter.
+
+    The body is re-traced under the original mesh and partition specs
+    (recovered from ``in_names``/``out_names``), so per-shard sites run
+    the backend on their local block and collectives replay in place.
+    ``check_rep=False``: the recorded body already carries the
+    replication-rewrite artifacts (``psum2``/``pbroadcast``), which the
+    evaluator canonicalizes back to plain collectives — running the
+    rewrite machinery again on top of them would double-apply it (and
+    it has no rules for the offloaded sites' ``custom_vjp`` wrappers).
+    """
+    from jax.experimental import shard_map as _shard_map  # deferred
+
+    p = eqn.params
+    body = p["jaxpr"]
+    in_specs = _names_to_specs(p["in_names"], eqn.invars)
+    out_specs = _names_to_specs(p["out_names"], eqn.outvars)
+
+    def body_fun(*args):
+        return tuple(eval_body(body, (), list(args), prefix))
+
+    rebuilt = _shard_map.shard_map(
+        body_fun, mesh=p["mesh"], in_specs=in_specs,
+        out_specs=out_specs, check_rep=False)
+    return list(rebuilt(*invals))
+
+
+def _eval_pmap(eqn, invals, eval_body, prefix):
+    """Rebuild a ``pmap`` with its per-device body rewritten."""
+    p = eqn.params
+    body = p["call_jaxpr"]
+    jaxpr = getattr(body, "jaxpr", body)
+    consts = getattr(body, "consts", ())
+
+    def body_fun(*args):
+        return tuple(eval_body(jaxpr, consts, list(args), prefix))
+
+    rebuilt = jax.pmap(body_fun, axis_name=p["axis_name"],
+                       in_axes=p["in_axes"], out_axes=p["out_axes"],
+                       devices=p.get("devices"),
+                       backend=p.get("backend"))
+    return list(rebuilt(*invals))
+
+
 def _signature(flat_args):
     # Python scalars trace as weakly-typed avals: keep them distinct
     # from same-dtype arrays so a cached transform is never reused
@@ -443,7 +580,18 @@ def _signature(flat_args):
                  for x in flat_args)
 
 
-def offload(fn, policy: PrecisionPolicy | None = None):
+#: ``wrapped.cache_info()`` record, same shape as functools.lru_cache's.
+CacheInfo = namedtuple("CacheInfo", ["hits", "misses", "maxsize",
+                                     "currsize"])
+
+#: Default bound on the per-wrapper transform cache.  Serve-style
+#: callers present an open-ended stream of signatures (every padded
+#: batch/prompt size is a new key), so the cache must evict, not grow.
+OFFLOAD_CACHE_SIZE = 64
+
+
+def offload(fn, policy: PrecisionPolicy | None = None, *,
+            cache_size: int = OFFLOAD_CACHE_SIZE):
     """Wrap ``fn`` so its large matmuls run through the policy backend.
 
     The first call for a given input signature traces ``fn`` once and
@@ -451,8 +599,14 @@ def offload(fn, policy: PrecisionPolicy | None = None):
     program is cached and later calls only evaluate it, so
     ``jax.jit(offload(fn, policy))`` compiles with no per-call
     re-tracing.  Batched/rank-N sites, sites inside ``scan``/``while``/
-    ``cond`` bodies, and reverse-mode AD are all supported; see the
-    module docstring.
+    ``cond``/``shard_map``/``pmap`` bodies, and reverse-mode AD are all
+    supported; see the module docstring.
+
+    The transform cache is a ``cache_size``-bounded LRU (least recently
+    *used* signature evicted first), so signature churn — a serving
+    loop padding every admission wave to a fresh (batch, prompt) shape
+    — cannot retain unbounded transformed jaxprs.  Inspect it with
+    ``wrapped.cache_info()`` and reset it with ``wrapped.cache_clear()``.
 
     The returned wrapper exposes ``wrapped.sites(*args, **kwargs)``,
     the exact :class:`Site` decisions taken for that signature — the
@@ -460,18 +614,27 @@ def offload(fn, policy: PrecisionPolicy | None = None):
     """
     policy = policy or PrecisionPolicy()
     backend = get_backend(policy.backend, policy=policy)
-    cache: Dict[Any, Any] = {}
+    if cache_size < 1:
+        raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+    cache: "OrderedDict[Any, Any]" = OrderedDict()
+    stats = {"hits": 0, "misses": 0}
 
     def build(args, kwargs):
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
         key = (in_tree, _signature(flat))
         entry = cache.get(key)
         if entry is None:
+            stats["misses"] += 1
             closed, out_shape = jax.make_jaxpr(
                 fn, return_shape=True)(*args, **kwargs)
             transformed, sites = transform_jaxpr(closed, policy, backend)
             out_tree = jax.tree_util.tree_structure(out_shape)
             entry = cache[key] = (transformed, sites, out_tree)
+            while len(cache) > cache_size:
+                cache.popitem(last=False)
+        else:
+            stats["hits"] += 1
+            cache.move_to_end(key)
         return flat, entry
 
     def wrapped(*args, **kwargs):
@@ -484,10 +647,20 @@ def offload(fn, policy: PrecisionPolicy | None = None):
         _, (_, site_list, _) = build(args, kwargs)
         return site_list
 
+    def cache_info() -> CacheInfo:
+        return CacheInfo(stats["hits"], stats["misses"], cache_size,
+                         len(cache))
+
+    def cache_clear() -> None:
+        cache.clear()
+        stats["hits"] = stats["misses"] = 0
+
     wrapped.__name__ = f"offload({getattr(fn, '__name__', 'fn')})"
     wrapped.sites = sites
     wrapped.policy = policy
     wrapped.backend = backend
+    wrapped.cache_info = cache_info
+    wrapped.cache_clear = cache_clear
     return wrapped
 
 

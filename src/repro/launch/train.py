@@ -14,6 +14,14 @@ MLP, and LM-head GEMM of the forward *and* backward pass through the
 Ozaki INT8 emulation, while sub-``--min-dim`` contractions (notably
 attention, k = head_dim) stay native, exactly like the paper's size
 cutoff.  The discovered sites are printed once per run.
+
+``--mesh dp=N`` runs the same step data-parallel over N devices
+(:func:`build_sharded_train_step`): parameters replicated, batch split
+over the ``dp`` axis, gradients ``pmean``-ed — and it composes with
+``--backend``, whose offload transform descends into the ``shard_map``
+body (sites named ``shmap0/...``), so every shard runs the identical
+per-shard Ozaki split schedule.  On CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 """
 
 from __future__ import annotations
@@ -29,9 +37,10 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend, offload
 from repro.models import Model
+from repro.shard import build_mesh, data_parallel_sharding
 from repro.train import AdamW, SyntheticText, checkpoint
 
-__all__ = ["main", "build_train_step"]
+__all__ = ["main", "build_train_step", "build_sharded_train_step"]
 
 
 def build_train_step(model: Model, opt: AdamW):
@@ -45,6 +54,40 @@ def build_train_step(model: Model, opt: AdamW):
         return params, opt_state, loss
 
     return train_step
+
+
+def build_sharded_train_step(model: Model, opt: AdamW, mesh,
+                             axis: str | None = None):
+    """Data-parallel version of :func:`build_train_step` over ``mesh``.
+
+    Each shard runs value_and_grad on its batch slice, losses and
+    gradients are ``pmean``-ed across ``axis``, and every shard applies
+    the identical AdamW update to its replicated parameters — so the
+    global step equals the single-device step on the full batch (equal
+    shard sizes make mean-of-shard-means the global mean), which the
+    dp=N equivalence tests pin down to 1e-10.
+
+    Wrapping the returned function in ``offload(...)`` routes the
+    per-shard forward AND backward GEMMs through the registry backend
+    (sites named ``shmap0/...``), with the same per-shard split
+    schedule a single-device run would use.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = axis or mesh.axis_names[0]
+
+    def per_shard_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        loss = jax.lax.pmean(loss, axis)
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis), grads)
+        params, opt_state = opt.update(grads, params, opt_state)
+        return params, opt_state, loss
+
+    return shard_map(per_shard_step, mesh=mesh,
+                     in_specs=(P(), P(), P(axis)),
+                     out_specs=(P(), P(), P()))
 
 
 def _describe_sites(sites) -> str:
@@ -75,6 +118,11 @@ def _parse(argv):
     ap.add_argument("--backend", default="",
                     help="GEMM registry spec (e.g. fp64_int8_4); empty "
                          "= native XLA matmuls")
+    ap.add_argument("--mesh", default="",
+                    help="mesh spec for data-parallel training (e.g. "
+                         "'dp=8'); empty = single device.  On CPU "
+                         "export XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N first")
     ap.add_argument("--min-dim", type=int, default=128,
                     help="offload size gate: min(m,k,n) for emulation")
     ap.add_argument("--ckpt-dir", default="",
@@ -108,7 +156,21 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
               f"{args.steps}; nothing to do")
         return []
 
-    train_step = build_train_step(model, opt)
+    mesh = batch_sharding = None
+    if args.mesh:
+        mesh = build_mesh(args.mesh)
+        if args.global_batch % mesh.size:
+            raise SystemExit(
+                f"[train] --global-batch {args.global_batch} is not "
+                f"divisible by mesh size {mesh.size} ({args.mesh})")
+        replicated, batch_sharding = data_parallel_sharding(mesh)
+        params, opt_state = jax.device_put((params, opt_state),
+                                           replicated)
+        print(f"[train] mesh {args.mesh}: {mesh.size} devices, "
+              f"per-shard batch {args.global_batch // mesh.size}")
+        train_step = build_sharded_train_step(model, opt, mesh)
+    else:
+        train_step = build_train_step(model, opt)
     if args.backend:
         # A pinned spec ("fp64_int8_4") is authoritative at execution;
         # mirror it into the policy so the printed site report shows
@@ -132,6 +194,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
     t_last = time.perf_counter()
     for step in range(start, args.steps):
         batch = jnp.asarray(data.batch(step))
+        if batch_sharding is not None:
+            batch = jax.device_put(batch, batch_sharding)
         params, opt_state, loss = step_fn(params, opt_state, batch)
         losses.append(float(loss))
         if step == start or (step + 1) % args.log_every == 0 \

@@ -41,9 +41,14 @@ _MASK_VALUE = -1e30
 
 
 def _rms_norm(x, weight, eps):
-    h = x.astype(jnp.float32)
+    # At-least-f32: f32 for f32/bf16 activations (unchanged), f64 for
+    # an f64 model — a hardcoded f32 here would push the *weight
+    # gradient* (a cross-batch reduction) down to f32, capping the
+    # data-parallel == single-device training equivalence at f32 ulps.
+    dt = jnp.promote_types(x.dtype, jnp.float32)
+    h = x.astype(dt)
     h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
-    return (h * weight.astype(jnp.float32)).astype(x.dtype)
+    return (h * weight.astype(dt)).astype(x.dtype)
 
 
 def _rope(x, positions, theta):
@@ -192,9 +197,16 @@ class Model:
         return self._head(params, x)
 
     def loss(self, params, tokens) -> jax.Array:
-        """Mean causal cross-entropy over ``tokens`` (B, T+1)."""
+        """Mean causal cross-entropy over ``tokens`` (B, T+1).
+
+        Computed in at-least-f32: f32 for f32/bf16 activations
+        (unchanged), f64 for an f64 model — downcasting would cap
+        data-parallel == single-device loss agreement at f32 ulps.
+        """
         inputs, targets = tokens[:, :-1], tokens[:, 1:]
-        logits = self.apply(params, inputs).astype(jnp.float32)
+        logits = self.apply(params, inputs)
+        logits = logits.astype(jnp.promote_types(logits.dtype,
+                                                 jnp.float32))
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
         return jnp.mean(nll)

@@ -13,6 +13,14 @@ Numerics note: each slot's computation is independent of its batch
 neighbours (attention is masked per slot, matmuls are batched but not
 mixed), so a prompt decoded in a busy batch yields the same greedy
 tokens as the same prompt decoded alone — the serve tests assert this.
+
+Multi-device serving: pass ``mesh=`` to shard the engine across the
+slot (batch) axis — parameters replicated, the KV cache and every
+prefill/decode batch partitioned over the mesh's first axis, so each
+device owns ``batch_slots / mesh.size`` slots.  Prefill waves are
+right-padded to a multiple of the mesh size so the sub-batch always
+divides evenly.  Per-slot independence (above) makes the sharded
+engine emit exactly the tokens the single-device engine would.
 """
 
 from __future__ import annotations
@@ -24,8 +32,10 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models import Model
+from repro.shard import data_parallel_sharding
 
 __all__ = ["Engine", "Request"]
 
@@ -54,15 +64,33 @@ class Engine:
       batch_slots: decode batch width = number of concurrent requests.
       max_len: KV-cache capacity per slot; a request finishes early if
         ``prompt + generated`` would outgrow it.
+      mesh: optional :class:`jax.sharding.Mesh`; shards the slot axis
+        over the mesh's first axis (``batch_slots`` must divide by the
+        mesh size).
     """
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, mesh=None):
         self.model = model
-        self.params = params
         self.batch_slots = int(batch_slots)
         self.max_len = int(max_len)
-        self.cache = model.init_cache(self.batch_slots, self.max_len)
+        self.mesh = mesh
+        if mesh is not None:
+            if self.batch_slots % mesh.size:
+                raise ValueError(
+                    f"batch_slots={self.batch_slots} is not divisible "
+                    f"by mesh size {mesh.size}")
+            # The canonical DP placements come from repro.shard; only
+            # the KV layout (slots on dim 1 of (layers, batch, ...))
+            # is serve-specific.
+            replicated, self._slot_sharding = \
+                data_parallel_sharding(mesh)
+            self._kv_sharding = NamedSharding(
+                mesh, PartitionSpec(None, mesh.axis_names[0]))
+            params = jax.device_put(params, replicated)
+        self.params = params
+        self.cache = self._pin(
+            model.init_cache(self.batch_slots, self.max_len))
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self._next_token = np.zeros(self.batch_slots, np.int32)
         # One compile per (admitted sub-batch size, padded prompt
@@ -71,6 +99,21 @@ class Engine:
         self._prefill = jax.jit(
             lambda p, t, n: model.prefill(p, t, n, self.max_len))
         self._decode = jax.jit(model.decode_step)
+
+    def _pin(self, cache: dict) -> dict:
+        """Re-assert the slot-axis sharding on a cache pytree.
+
+        No-op without a mesh (and a no-copy no-op when the layout
+        already matches); after a host-side scatter or a decode step
+        this keeps the cache partitioned slot-wise instead of drifting
+        to whatever layout the last op produced.
+        """
+        if self.mesh is None:
+            return cache
+        return {"k": jax.device_put(cache["k"], self._kv_sharding),
+                "v": jax.device_put(cache["v"], self._kv_sharding),
+                "length": jax.device_put(cache["length"],
+                                         self._slot_sharding)}
 
     # -- lifecycle ---------------------------------------------------
 
@@ -96,19 +139,32 @@ class Engine:
         idx = np.array([i for i, _ in batch])
         lengths = np.array([len(r.prompt) for _, r in batch], np.int32)
         P = min(_round_up(int(lengths.max())), self.max_len)
-        tokens = np.zeros((len(batch), P), np.int32)
+        # With a mesh the wave is right-padded (dummy rows: empty
+        # prompt, length 1) to a multiple of the mesh size so the
+        # prefill batch shards evenly; dummy rows are dropped before
+        # the scatter.
+        rows = (len(batch) if self.mesh is None
+                else _round_up(len(batch), self.mesh.size))
+        tokens = np.zeros((rows, P), np.int32)
         for row, (_, req) in enumerate(batch):
             tokens[row, :len(req.prompt)] = req.prompt
-        sub_cache, last_logits = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths))
-        # Scatter the sub-batch cache into the shared slots.
+        lengths = np.concatenate(
+            [lengths, np.ones(rows - len(batch), np.int32)])
+        tokens, lengths = jnp.asarray(tokens), jnp.asarray(lengths)
+        if self.mesh is not None:
+            tokens = jax.device_put(tokens, self._slot_sharding)
+            lengths = jax.device_put(lengths, self._slot_sharding)
+        sub_cache, last_logits = self._prefill(self.params, tokens,
+                                               lengths)
+        # Scatter the real sub-batch rows into the shared slots.
         jidx = jnp.asarray(idx)
-        self.cache = {
-            "k": self.cache["k"].at[:, jidx].set(sub_cache["k"]),
-            "v": self.cache["v"].at[:, jidx].set(sub_cache["v"]),
+        n = len(batch)
+        self.cache = self._pin({
+            "k": self.cache["k"].at[:, jidx].set(sub_cache["k"][:, :n]),
+            "v": self.cache["v"].at[:, jidx].set(sub_cache["v"][:, :n]),
             "length": self.cache["length"].at[jidx].set(
-                sub_cache["length"]),
-        }
+                sub_cache["length"][:n]),
+        })
         first = np.asarray(self.model.greedy(last_logits))
         for row, (slot, req) in enumerate(batch):
             self.slots[slot] = req
@@ -129,9 +185,18 @@ class Engine:
         active = np.array([r is not None for r in self.slots])
         if not active.any():
             return
-        self.cache, logits = self._decode(
-            self.params, self.cache,
-            jnp.asarray(self._next_token), jnp.asarray(active))
+        tokens = jnp.asarray(self._next_token)
+        active_dev = jnp.asarray(active)
+        if self.mesh is not None:
+            tokens = jax.device_put(tokens, self._slot_sharding)
+            active_dev = jax.device_put(active_dev,
+                                        self._slot_sharding)
+        cache, logits = self._decode(self.params, self.cache,
+                                     tokens, active_dev)
+        # Re-pin (no-copy when the layout already matches) so the KV
+        # cache stays slot-partitioned even if output-sharding
+        # propagation ever produces a different layout.
+        self.cache = self._pin(cache)
         nxt = np.asarray(self.model.greedy(logits))
         for slot, req in enumerate(list(self.slots)):
             if req is not None:

@@ -1,0 +1,129 @@
+"""Mesh construction and data-parallel sharding helpers.
+
+The scaling axis the ROADMAP calls for: everything multi-device in the
+repo goes through this module, so the mesh recipe is written down once.
+On a CPU-only box JAX exposes *virtual* devices via::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+which is exactly how the sharded tests, the multi-device CI job, and
+the ``--mesh dp=8`` train smoke run — same code path as real
+accelerators, no hardware required.
+
+Helpers:
+
+* :func:`parse_mesh_spec` / :func:`build_mesh` — ``"dp=8"`` (or
+  ``"dp=4,tp=2"``) to a :class:`jax.sharding.Mesh` over the first
+  ``prod(sizes)`` devices;
+* :func:`data_parallel_sharding` — the canonical DP placement:
+  parameters (and optimizer state) replicated, the batch split on its
+  leading axis;
+* :func:`replicate` / :func:`shard_batch` — ``device_put`` shortcuts
+  for those two placements.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "parse_mesh_spec",
+    "build_mesh",
+    "data_parallel_sharding",
+    "replicate",
+    "shard_batch",
+]
+
+
+def parse_mesh_spec(spec: str) -> Dict[str, int]:
+    """``"dp=8"`` / ``"dp=4,tp=2"`` -> ``{"dp": 8}`` / ``{"dp": 4, "tp": 2}``.
+
+    Axis order in the string is the mesh axis order.  Sizes must be
+    positive integers; axis names must be unique.
+    """
+    axes: Dict[str, int] = {}
+    for part in (spec or "").split(","):
+        name, sep, size = part.strip().partition("=")
+        if not sep or not name:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected 'axis=size[,...]' "
+                "(e.g. 'dp=8')")
+        if name in axes:
+            raise ValueError(f"bad mesh spec {spec!r}: duplicate axis "
+                             f"{name!r}")
+        try:
+            n = int(size)
+        except ValueError:
+            raise ValueError(f"bad mesh spec {spec!r}: size of "
+                             f"{name!r} is not an integer") from None
+        if n < 1:
+            raise ValueError(f"bad mesh spec {spec!r}: size of "
+                             f"{name!r} must be >= 1")
+        axes[name] = n
+    return axes
+
+
+def build_mesh(spec: str = "dp=1", devices=None) -> Mesh:
+    """Build a :class:`Mesh` from a spec string.
+
+    Uses the first ``prod(sizes)`` of ``devices`` (default
+    ``jax.devices()``), reshaped to the spec's axis sizes.  Raises with
+    the virtual-device recipe when the host has too few devices.
+    """
+    axes = parse_mesh_spec(spec)
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = math.prod(axes.values())
+    if need > len(devices):
+        raise ValueError(
+            f"mesh {spec!r} needs {need} devices but only "
+            f"{len(devices)} are visible; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before the first jax import")
+    grid = np.array(devices[:need]).reshape(tuple(axes.values()))
+    return Mesh(grid, tuple(axes))
+
+
+def data_parallel_sharding(mesh: Mesh, axis: str | None = None
+                           ) -> Tuple[NamedSharding, NamedSharding]:
+    """The canonical data-parallel placement for ``(params, batch)``.
+
+    Returns ``(replicated, batch_sharding)``: parameters/optimizer
+    state fully replicated, the batch partitioned over ``axis``
+    (default: the mesh's first axis) on its leading dimension.  Both
+    are :class:`NamedSharding` and apply to whole pytrees via
+    ``jax.device_put(tree, sharding)``.
+    """
+    axis = axis or mesh.axis_names[0]
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes "
+                         f"{mesh.axis_names}")
+    return (NamedSharding(mesh, PartitionSpec()),
+            NamedSharding(mesh, PartitionSpec(axis)))
+
+
+def replicate(tree, mesh: Mesh):
+    """Place every leaf of ``tree`` replicated across ``mesh``."""
+    return jax.device_put(tree, NamedSharding(mesh, PartitionSpec()))
+
+
+def shard_batch(batch, mesh: Mesh, axis: str | None = None):
+    """Split ``batch`` over ``axis`` on its leading dimension.
+
+    The leading extent must divide by the axis size — a ragged final
+    shard would change per-shard loss weighting, breaking the
+    dp=N == single-device equivalence the tests assert.
+    """
+    axis = axis or mesh.axis_names[0]
+    size = mesh.shape[axis]
+    lead = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if lead % size:
+        raise ValueError(
+            f"leading batch extent {lead} is not divisible by mesh "
+            f"axis {axis!r} of size {size}")
+    return jax.device_put(
+        batch, NamedSharding(mesh, PartitionSpec(axis)))

@@ -1,9 +1,12 @@
 """Checkpointing: atomic, bit-exact pytree snapshots as ``.npz``.
 
 ``save`` flattens the pytree and writes one compressed-free ``.npz``
-per step, through a temp file + ``os.replace`` so a killed run can
-never leave a half-written checkpoint behind — the resume path either
-sees a complete file or the previous step.  ``restore`` takes a
+per step, through fsync'd temp file + ``os.replace`` + parent-dir
+fsync, so neither a killed run nor a machine crash can leave a
+half-written (or silently empty-after-rename) checkpoint behind — the
+resume path either sees a complete file or the previous step.
+Stranded ``*.tmp`` files from a kill mid-write are invisible to
+``latest_step`` and overwritten by the next save of that step.  ``restore`` takes a
 structure-donor pytree (``like``) and validates leaf count, shapes and
 dtypes against it, raising :class:`CheckpointError` on any mismatch so
 callers can distinguish "no/incompatible checkpoint" (fall back to
@@ -34,7 +37,12 @@ def _path(ckpt_dir, step: int) -> Path:
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
-    """Highest step with a complete checkpoint in ``ckpt_dir``, or None."""
+    """Highest step with a complete checkpoint in ``ckpt_dir``, or None.
+
+    Only exact ``step_<n>.npz`` names count — in particular a stranded
+    ``step_<n>.npz.tmp`` from a killed :func:`save` is never mistaken
+    for a resumable checkpoint (the fullmatch excludes any suffix).
+    """
     d = Path(ckpt_dir)
     if not d.is_dir():
         return None
@@ -44,7 +52,15 @@ def latest_step(ckpt_dir) -> Optional[int]:
 
 
 def save(ckpt_dir, step: int, tree) -> Path:
-    """Write ``tree`` for ``step``; atomic within ``ckpt_dir``."""
+    """Write ``tree`` for ``step``; crash-atomic within ``ckpt_dir``.
+
+    ``os.replace`` alone only orders the rename against *other renames*;
+    without an ``fsync`` of the temp file the kernel may commit the
+    rename before the data blocks, and a crash then leaves a complete-
+    looking but empty/truncated ``.npz``.  So: fsync the temp file
+    before the rename, then fsync the directory so the rename itself is
+    durable.
+    """
     d = Path(ckpt_dir)
     d.mkdir(parents=True, exist_ok=True)
     leaves, _ = jax.tree_util.tree_flatten(tree)
@@ -54,7 +70,19 @@ def save(ckpt_dir, step: int, tree) -> Path:
     tmp = final.with_name(final.name + ".tmp")
     with open(tmp, "wb") as f:
         np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, final)  # atomic: readers never see a partial file
+    try:
+        dir_fd = os.open(d, os.O_RDONLY)
+    except OSError:  # pragma: no cover - no dir open (e.g. Windows)
+        return final
+    try:
+        os.fsync(dir_fd)  # make the rename itself durable
+    except OSError:  # pragma: no cover - fs without dir fsync
+        pass
+    finally:
+        os.close(dir_fd)
     return final
 
 

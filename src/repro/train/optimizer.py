@@ -31,20 +31,25 @@ class AdamW:
     eps: float = 1e-8
     weight_decay: float = 0.01
 
+    @staticmethod
+    def _acc_dtype(p):
+        # Moments and update arithmetic run in at-least-f32: f32 for
+        # f32/bf16 params (unchanged), f64 for f64 params — silently
+        # quantizing an f64 model's optimizer to f32 would cap the
+        # dp=N == single-device train equivalence at f32 resolution.
+        return jnp.promote_types(p.dtype, jnp.float32)
+
     def init(self, params) -> dict:
         zeros = lambda t: jax.tree_util.tree_map(  # noqa: E731
-            lambda p: jnp.zeros_like(p, dtype=jnp.float32), t)
+            lambda p: jnp.zeros_like(p, dtype=self._acc_dtype(p)), t)
         return {"step": jnp.zeros((), jnp.int32),
                 "mu": zeros(params), "nu": zeros(params)}
 
     def update(self, grads, params, state):
         t = state["step"] + 1
-        tf = t.astype(jnp.float32)
-        bc1 = 1.0 - self.b1 ** tf
-        bc2 = 1.0 - self.b2 ** tf
 
         def moment(old, g, beta):
-            g = g.astype(jnp.float32)
+            g = g.astype(old.dtype)
             return beta * old + (1.0 - beta) * g
 
         mu = jax.tree_util.tree_map(
@@ -53,9 +58,15 @@ class AdamW:
             lambda v, g: moment(v, g * g, self.b2), state["nu"], grads)
 
         def step(p, m, v):
+            # Bias corrections in the leaf's accumulation dtype: a
+            # shared f32 bc1/bc2 would cap an f64 model's update at
+            # f32 resolution.
+            tf = t.astype(m.dtype)
+            bc1 = 1.0 - self.b1 ** tf
+            bc2 = 1.0 - self.b2 ** tf
             upd = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
-            upd = upd + self.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - self.lr * upd).astype(p.dtype)
+            upd = upd + self.weight_decay * p.astype(upd.dtype)
+            return (p.astype(upd.dtype) - self.lr * upd).astype(p.dtype)
 
         new_params = jax.tree_util.tree_map(step, params, mu, nu)
         return new_params, {"step": t, "mu": mu, "nu": nu}

@@ -1,11 +1,25 @@
-"""Test bootstrap: src/ on the path, float64 enabled globally."""
+"""Test bootstrap: src/ on the path, float64 enabled, 8 virtual devices.
 
+The device-count flag must land in the environment before the first
+``jax`` import: the whole suite runs against 8 virtual CPU devices so
+the sharded execution paths (``tests/test_shard.py``) are exercised by
+the plain tier-1 ``pytest`` invocation, with no special environment.
+An externally provided ``XLA_FLAGS`` that already forces a device
+count wins (the multi-device CI job sets its own).
+"""
+
+import os
 import pathlib
 import sys
 
 SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+_FLAGS = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _FLAGS:
+    os.environ["XLA_FLAGS"] = (
+        _FLAGS + " --xla_force_host_platform_device_count=8").strip()
 
 import jax  # noqa: E402
 

@@ -78,6 +78,51 @@ def test_derived_check_gates_site_count():
     assert any("field missing" in f for f in missing)
 
 
+def test_skip_row_reference_fails_named():
+    # A degraded bench run emits "row,0,skipped=..." — a gate touching
+    # it must fail with a named message, not divide by zero.
+    derived = {"native": {"skipped": "RuntimeError"}}
+    failures, _ = evaluate({"native": 0.0, "emul": 1.0}, BASELINE,
+                           derived)
+    assert any("skip row" in f and "degraded" in f for f in failures)
+    assert not any("ZeroDivision" in f for f in failures)
+
+
+def test_explicit_skipped_row_name_fails_named():
+    base = {"tolerance": 0.25,
+            "gates": [{"metric": "emul", "reference": "row_skipped",
+                       "max_ratio": 10.0}]}
+    failures, _ = evaluate({"row_skipped": 5.0, "emul": 1.0}, base)
+    assert any("skip row" in f for f in failures)
+
+
+def test_malformed_gate_fails_named_not_keyerror():
+    base = {"gates": [{"metric": "emul"}]}  # no reference/max_ratio
+    failures, _ = evaluate({"emul": 1.0}, base)
+    assert any("malformed" in f for f in failures)
+
+
+def test_malformed_derived_check_fails_named():
+    base = {"derived_checks": [{"row": "emul"}]}  # no key/min
+    failures, _ = evaluate({"emul": 1.0}, base)
+    assert any("malformed" in f for f in failures)
+
+
+def test_non_numeric_derived_value_fails_named():
+    base = {"derived_checks": [
+        {"row": "emul", "key": "sites", "min": 1}]}
+    failures, _ = evaluate({"emul": 1.0}, base,
+                           {"emul": {"sites": "n/a"}})
+    assert any("not numeric" in f for f in failures)
+
+
+def test_update_refuses_skip_row():
+    with pytest.raises(SystemExit, match="skip row"):
+        update({"native": 100.0, "emul": 50.0},
+               json.loads(json.dumps(BASELINE)),
+               {"emul": {"skipped": "ImportError"}})
+
+
 def test_committed_baseline_is_well_formed():
     path = (pathlib.Path(__file__).resolve().parent.parent
             / "benchmarks" / "baseline_quick.json")

@@ -111,6 +111,58 @@ class TestOffloadNumerics:
         np.testing.assert_allclose(got, ref, rtol=1e-10, atol=1e-10)
 
 
+class TestTransformCacheLRU:
+    def test_cache_info_counts(self, operands):
+        a, b = operands
+        pol = PrecisionPolicy(default_splits=4, min_dim=64)
+        w = offload(_solver, pol)
+        assert w.cache_info() == (0, 0, 64, 0)
+        w(a, b)
+        w(a, b)
+        w(a[:96], b)
+        info = w.cache_info()
+        assert (info.hits, info.misses, info.currsize) == (1, 2, 2)
+        assert info.maxsize == 64
+        w.cache_clear()
+        assert w.cache_info() == (0, 0, 64, 0)
+
+    def test_signature_churn_is_bounded(self, operands):
+        # Serve-style churn: every padded batch size is a new
+        # signature; the cache must evict, not grow without bound.
+        _, b = operands
+
+        def f(a, b):
+            return a @ b
+
+        w = offload(f, PrecisionPolicy(min_dim=64), cache_size=4)
+        for rows in range(64, 64 + 10):
+            w(jnp.ones((rows, 192)), b)
+        info = w.cache_info()
+        assert info.currsize == 4 and info.misses == 10
+
+    def test_eviction_is_least_recently_used(self, operands):
+        _, b = operands
+
+        def f(a, b):
+            return a @ b
+
+        w = offload(f, PrecisionPolicy(min_dim=64), cache_size=2)
+        a64, a80, a96 = (jnp.ones((r, 192)) for r in (64, 80, 96))
+        w(a64, b)
+        w(a80, b)
+        w(a64, b)   # refresh a64: a80 is now the LRU entry
+        w(a96, b)   # evicts a80
+        assert w.cache_info().currsize == 2
+        w(a64, b)   # still cached
+        assert w.cache_info().hits == 2
+        w(a80, b)   # was evicted -> re-traces
+        assert w.cache_info().misses == 4
+
+    def test_rejects_senseless_cache_size(self):
+        with pytest.raises(ValueError, match="cache_size"):
+            offload(lambda x: x, cache_size=0)
+
+
 class TestSharedSiteNames:
     def test_nested_pjit_names_identical(self, operands):
         # Regression: PR-1 numbered sites differently in site_report
@@ -147,6 +199,35 @@ class TestSharedSiteNames:
         offload_names = [s.name for s in offload(f, pol).sites(a, b)]
         assert report_names == offload_names
         assert report_names == ["scan0/dot0", "dot0"]
+
+    def test_offload_of_jitted_fn_names_identical(self, operands):
+        # offload(jax.jit(f)): the whole function arrives as one pjit
+        # eqn; inlining must keep the flat dot numbering of f itself.
+        a, b = operands
+        f = jax.jit(_solver)
+        pol = PrecisionPolicy(default_splits=5, min_dim=64)
+        report_names = [s.name for s in site_report(f, pol)(a, b)]
+        offload_names = [s.name for s in offload(f, pol).sites(a, b)]
+        assert report_names == offload_names
+        assert report_names == ["dot0", "dot1", "dot2"]
+
+    def test_vmap_of_offload_names_identical(self, operands):
+        # jax.vmap(offload(f)) traces the wrapper with batch tracers:
+        # sites must be discovered on the *per-example* shapes with the
+        # same names an unbatched call produces, and execution must
+        # match vmap of the native function.
+        a, b = operands
+        pol = PrecisionPolicy(default_splits=8, min_dim=64)
+        wrapped = offload(_solver, pol)
+        batched = jax.vmap(wrapped, in_axes=(0, None))
+        stack = jnp.stack([a, 2.0 * a, a - 1.0])
+        got = np.asarray(batched(stack, b))
+        ref = np.asarray(jax.vmap(_solver, in_axes=(0, None))(stack, b))
+        np.testing.assert_allclose(got, ref, rtol=1e-5)
+        # The signature seen under vmap is the per-example one: names
+        # (and decisions) are identical to the unbatched report.
+        assert [s.name for s in wrapped.sites(a, b)] == \
+            [s.name for s in site_report(_solver, pol)(a, b)]
 
     def test_site_override_applies_through_offload(self, operands):
         # The stable names must be usable PrecisionPolicy.site_splits

@@ -102,6 +102,28 @@ class TestCheckpoint:
         checkpoint.save(tmp_path, 12, tree)
         assert checkpoint.latest_step(tmp_path) == 12
 
+    def test_latest_step_ignores_stranded_tmp(self, tmp_path):
+        # A run killed mid-save leaves step_<n>.npz.tmp behind; the
+        # resume path must never treat it as a resumable checkpoint.
+        tree = {"x": jnp.zeros((2,))}
+        checkpoint.save(tmp_path, 4, tree)
+        (tmp_path / "step_00000009.npz.tmp").write_bytes(b"partial")
+        assert checkpoint.latest_step(tmp_path) == 4
+        only_tmp = tmp_path / "only_tmp"
+        only_tmp.mkdir()
+        (only_tmp / "step_00000002.npz.tmp").write_bytes(b"partial")
+        assert checkpoint.latest_step(only_tmp) is None
+
+    def test_save_overwrites_stranded_tmp(self, tmp_path):
+        # The next save of the same step must clobber the stranded tmp
+        # and land a complete checkpoint.
+        tree = {"x": jnp.arange(3, dtype=jnp.float32)}
+        (tmp_path / "step_00000004.npz.tmp").write_bytes(b"partial")
+        checkpoint.save(tmp_path, 4, tree)
+        assert not (tmp_path / "step_00000004.npz.tmp").exists()
+        _assert_trees_bit_identical(
+            tree, checkpoint.restore(tmp_path, 4, tree))
+
     def test_missing_step_raises(self, tmp_path):
         with pytest.raises(CheckpointError, match="no checkpoint"):
             checkpoint.restore(tmp_path, 1, {"x": jnp.zeros((2,))})
