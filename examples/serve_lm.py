@@ -27,13 +27,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=sorted(PRESETS), default="reduced")
     ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--plan", default="",
+                    help="precision-plan JSON: serve the prefill/"
+                         "decode GEMMs under the tuned plan")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="override the per-preset checkpoint dir")
     args = ap.parse_args()
 
     arch, overrides, _, _ = PRESETS[args.preset]
     cfg = get_config(arch).replace(**overrides)
     model = Model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    ckpt_dir = ckpt_dir_for(args.preset)
+    ckpt_dir = args.ckpt_dir or ckpt_dir_for(args.preset)
     last = CK.latest_step(ckpt_dir)
     if last is not None:
         print(f"[serve] loading checkpoint step {last}")
@@ -46,7 +51,15 @@ def main():
             # and propagates.
             print(f"[serve] restore failed ({e}); using random init")
 
-    engine = Engine(model, params, batch_slots=4, max_len=512)
+    plan = None
+    if args.plan:
+        from repro.tune import PrecisionPlan
+
+        plan = PrecisionPlan.load(args.plan)
+        print(f"[serve] precision plan {args.plan} "
+              f"({plan.fingerprint}, {len(plan.sites)} sites)")
+    engine = Engine(model, params, batch_slots=4, max_len=512,
+                    plan=plan)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=[int(t) for t in
                             rng.integers(1, cfg.vocab_size, 16)],

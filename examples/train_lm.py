@@ -51,6 +51,17 @@ def main():
                     help="e.g. 'dp=8' (needs XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8 "
                          "on CPU)")
+    ap.add_argument("--tune", type=int, default=0,
+                    help="calibrate N batches, write --plan, exit")
+    ap.add_argument("--plan", default="",
+                    help="precision-plan JSON (write with --tune, "
+                         "train under it without)")
+    ap.add_argument("--allow-plan-change", action="store_true",
+                    help="adopt a different precision configuration "
+                         "on an existing checkpoint lineage")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="override the per-preset checkpoint dir "
+                         "(plans pin training numerics per lineage)")
     args = ap.parse_args()
 
     arch, overrides, seq_len, batch = PRESETS[args.preset]
@@ -59,14 +70,24 @@ def main():
             "--steps", str(args.steps),
             "--seq-len", str(args.seq_len or seq_len),
             "--global-batch", str(args.global_batch or batch),
-            "--ckpt-dir", ckpt_dir_for(args.preset),
+            "--ckpt-dir", args.ckpt_dir or ckpt_dir_for(args.preset),
             "--ckpt-every", "100",
             "--log-every", "10"]
     if args.backend:
         argv += ["--backend", args.backend]
     if args.mesh:
         argv += ["--mesh", args.mesh]
+    if args.tune:
+        argv += ["--tune", str(args.tune)]
+    if args.plan:
+        argv += ["--plan", args.plan]
+    if args.allow_plan_change:
+        argv += ["--allow-plan-change"]
     losses = train_main(argv)
+    if args.tune:
+        print(f"[train_lm] OK: calibrated {args.tune} batch(es); "
+              f"plan at {args.plan}")
+        return
     if len(losses) >= 2:
         assert losses[-1] < losses[0], "loss did not improve"
         print("[train_lm] OK: loss improved "

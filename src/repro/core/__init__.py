@@ -17,13 +17,15 @@ from .intercept import (CacheInfo, Site, offload, site_report,
 from .ozaki import (SLICE_BITS, num_pair_gemms, ozaki_matmul,
                     pair_indices, slice_matrix)
 from .precision import (AdaptiveGemm, PrecisionPolicy, SiteState,
-                        estimate_rel_error, measure_splits,
-                        predict_splits, splits_for_tolerance)
+                        canonical_site, estimate_rel_error,
+                        measure_splits, predict_splits,
+                        splits_for_tolerance)
 
 __all__ = [
     "SLICE_BITS",
     "AdaptiveGemm",
     "CacheInfo",
+    "canonical_site",
     "GemmBackend",
     "PrecisionPolicy",
     "Site",

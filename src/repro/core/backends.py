@@ -76,6 +76,16 @@ class GemmBackend:
     #: The spec string this backend was built from (round-trips through
     #: :func:`get_backend`).
     spec: str = ""
+    #: Whether the offload transform may wrap this backend's sites in
+    #: the emulated-backward ``custom_vjp``.  Instrumentation backends
+    #: (the tuner's calibration recorder) opt out: their side effects
+    #: cannot stage through custom_vjp and their output is never
+    #: differentiated.
+    supports_vjp: bool = True
+    #: When True, every eligible site routes through this instance,
+    #: overriding per-site ``PrecisionPolicy.site_backends`` specs
+    #: (again the calibration recorder: it must see the whole program).
+    intercepts_all_sites: bool = False
 
     def __init__(self, spec: str, policy: PrecisionPolicy):
         self.spec = spec

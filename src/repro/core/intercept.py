@@ -69,6 +69,7 @@ Public API
 from __future__ import annotations
 
 import math
+import warnings
 from collections import OrderedDict, namedtuple
 from typing import Any, Dict, List, Sequence, Tuple
 
@@ -104,11 +105,52 @@ _INLINE_PRIMITIVES = {"pjit", "closed_call", "remat", "remat2",
                       "checkpoint"}
 
 
+def _check_overrides(policy: PrecisionPolicy, decisions) -> None:
+    """Surface ``site_splits``/``site_backends`` keys that match nothing.
+
+    A typo'd site name would otherwise silently run at the default
+    split count — the exact failure mode per-site tuning exists to
+    prevent.  ``policy.on_unmatched_site`` picks warn (default),
+    raise (strict), or ignore (plans applied to a site subset).
+    """
+    mode = policy.on_unmatched_site
+    if mode == "ignore" or not (policy.site_splits
+                                or policy.site_backends):
+        return
+    if mode not in ("warn", "raise"):
+        raise ValueError(
+            f"on_unmatched_site must be 'warn', 'raise' or 'ignore', "
+            f"got {mode!r}")
+    unmatched = policy.unmatched_overrides(decisions)
+    if not unmatched:
+        return
+    msg = (f"per-site override keys {unmatched} match no dot_general "
+           f"site in the traced function (sites: "
+           f"{sorted(decisions)}); they would silently have no effect")
+    if mode == "raise":
+        raise ValueError(msg)
+    warnings.warn(msg, stacklevel=3)
+
+
 class Site:
-    """One discovered ``dot_general`` site and the decision taken."""
+    """One discovered ``dot_general`` site and the decision taken.
+
+    Beyond the decision itself the record carries the static facts the
+    tuner (:mod:`repro.tune`) keys on: the normalized extents
+    ``m``/``k``/``n``/``batch``, the static trip multiplicity ``mult``
+    (how many times one step executes this site — the enclosing
+    ``scan`` lengths multiplied out), the enclosing SPMD axes
+    ``spmd_axes`` (``(name, size)`` pairs of the ``shard_map``/``pmap``
+    meshes the site runs under), the resolved per-site ``backend``
+    spec, and ``eligible`` — whether the site passed the dtype and
+    size gates (a plan-demoted site is eligible but not offloaded).
+    """
 
     def __init__(self, name: str, lhs_shape, rhs_shape, dtype,
-                 offloaded: bool, splits: int, reason: str):
+                 offloaded: bool, splits: int, reason: str, *,
+                 m: int = 0, k: int = 0, n: int = 0, batch: int = 1,
+                 mult: int = 1, spmd_axes=(), backend: str = "",
+                 eligible: bool = False):
         self.name = name
         self.lhs_shape = tuple(lhs_shape)
         self.rhs_shape = tuple(rhs_shape)
@@ -116,6 +158,25 @@ class Site:
         self.offloaded = offloaded
         self.splits = splits
         self.reason = reason
+        self.m, self.k, self.n, self.batch = m, k, n, batch
+        self.mult = mult
+        self.spmd_axes = tuple(spmd_axes)
+        self.backend = backend
+        self.eligible = eligible
+
+    @property
+    def flops(self) -> int:
+        """Per-step FLOPs of this site, summed over mesh shards.
+
+        ``2*batch*m*k*n`` per execution, times the static trip
+        multiplicity, times the enclosing SPMD axis sizes (every shard
+        runs the per-shard GEMM once), times 4 for the complex
+        four-real-GEMM decomposition.
+        """
+        spmd = math.prod(s for _, s in self.spmd_axes)
+        cplx = 4 if jnp.issubdtype(self.dtype, jnp.complexfloating) else 1
+        return (2 * max(self.batch, 1) * self.m * self.k * self.n
+                * self.mult * spmd * cplx)
 
     def __repr__(self):
         action = (f"offload splits={self.splits}" if self.offloaded
@@ -137,13 +198,25 @@ def _subjaxprs(eqn):
         return
 
 
+def _mesh_axes(mesh) -> Tuple[Tuple[str, int], ...]:
+    """(name, size) pairs of a shard_map mesh (concrete or abstract)."""
+    return tuple((str(name), int(mesh.shape[name]))
+                 for name in mesh.axis_names)
+
+
 def _walk_sites(jaxpr, prefix: str = "", dot_counter=None,
-                flow_counter=None, out=None) -> List[Tuple[Any, str]]:
+                flow_counter=None, out=None, mult: int = 1,
+                spmd=()) -> List[Tuple[Any, str, int, tuple]]:
     """Enumerate ``dot_general`` equations with their structural names.
 
     This single walker is the naming authority: both :func:`site_report`
-    and the offload transform consume its ``(eqn, name)`` pairs, so the
-    two APIs can never diverge.
+    and the offload transform consume its ``(eqn, name, mult, spmd)``
+    entries, so the two APIs can never diverge.  ``mult`` is the static
+    trip multiplicity of the scope (the product of enclosing ``scan``
+    lengths; ``while`` bodies and ``cond`` branches count as one — the
+    trip count is dynamic) and ``spmd`` the enclosing SPMD axes as
+    ``(name, size)`` pairs, both consumed by the site records the
+    tuner calibrates against.
     """
     dot_counter = [0] if dot_counter is None else dot_counter
     flow_counter = [0] if flow_counter is None else flow_counter
@@ -151,65 +224,85 @@ def _walk_sites(jaxpr, prefix: str = "", dot_counter=None,
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
         if prim == "dot_general":
-            out.append((eqn, f"{prefix}dot{dot_counter[0]}"))
+            out.append((eqn, f"{prefix}dot{dot_counter[0]}", mult, spmd))
             dot_counter[0] += 1
         elif prim in _INLINE_PRIMITIVES:
             for sub, _ in _subjaxprs(eqn):
-                _walk_sites(sub, prefix, dot_counter, flow_counter, out)
+                _walk_sites(sub, prefix, dot_counter, flow_counter, out,
+                            mult, spmd)
         elif prim == "shard_map":
             # The body sees *per-shard* shapes: sites inside get their
             # offload decision (and size gate) against the local block,
             # so the per-device Ozaki schedule matches a single-device
             # run on one shard.
             _walk_sites(eqn.params["jaxpr"],
-                        f"{prefix}shmap{flow_counter[0]}/", out=out)
+                        f"{prefix}shmap{flow_counter[0]}/", out=out,
+                        mult=mult,
+                        spmd=spmd + _mesh_axes(eqn.params["mesh"]))
             flow_counter[0] += 1
         elif prim == "xla_pmap":
             body = eqn.params["call_jaxpr"]
+            axis = ((str(eqn.params["axis_name"]),
+                     int(eqn.params["global_axis_size"])),)
             _walk_sites(getattr(body, "jaxpr", body),
-                        f"{prefix}pmap{flow_counter[0]}/", out=out)
+                        f"{prefix}pmap{flow_counter[0]}/", out=out,
+                        mult=mult, spmd=spmd + axis)
             flow_counter[0] += 1
         elif prim == "scan":
             body = eqn.params["jaxpr"]
             _walk_sites(body.jaxpr, f"{prefix}scan{flow_counter[0]}/",
-                        out=out)
+                        out=out, mult=mult * int(eqn.params["length"]),
+                        spmd=spmd)
             flow_counter[0] += 1
         elif prim == "while":
             pfx = f"{prefix}while{flow_counter[0]}/"
             _walk_sites(eqn.params["cond_jaxpr"].jaxpr, pfx + "cond/",
-                        out=out)
-            _walk_sites(eqn.params["body_jaxpr"].jaxpr, pfx, out=out)
+                        out=out, mult=mult, spmd=spmd)
+            _walk_sites(eqn.params["body_jaxpr"].jaxpr, pfx, out=out,
+                        mult=mult, spmd=spmd)
             flow_counter[0] += 1
         elif prim == "cond":
             pfx = f"{prefix}cond{flow_counter[0]}/"
             for bi, br in enumerate(eqn.params["branches"]):
-                _walk_sites(br.jaxpr, f"{pfx}br{bi}/", out=out)
+                _walk_sites(br.jaxpr, f"{pfx}br{bi}/", out=out,
+                            mult=mult, spmd=spmd)
             flow_counter[0] += 1
     return out
 
 
-def _classify(eqn, policy: PrecisionPolicy, name: str) -> Site:
+def _classify(eqn, policy: PrecisionPolicy, name: str, mult: int = 1,
+              spmd=()) -> Site:
     """Decide whether one dot_general equation gets offloaded."""
     lhs_aval, rhs_aval = (v.aval for v in eqn.invars)
-    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
     dtype = eqn.outvars[0].aval.dtype
-
-    def skip(reason):
-        return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
-                    False, 0, reason)
-
-    if not (jnp.issubdtype(dtype, jnp.floating)
-            or jnp.issubdtype(dtype, jnp.complexfloating)):
-        return skip(f"dtype {jnp.dtype(dtype).name}")
     # The same normalization that will execute (batch dims excluded,
     # free/contraction extents merged) decides the size gate.
     dims = _DotDims(eqn.params["dimension_numbers"],
                     lhs_aval.shape, rhs_aval.shape)
     m, k, n = dims.M, dims.K, dims.N
+    geom = dict(m=m, k=k, n=n, batch=dims.B, mult=mult,
+                spmd_axes=spmd)
+
+    def skip(reason, eligible=False, backend=""):
+        return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
+                    False, 0, reason, eligible=eligible,
+                    backend=backend, **geom)
+
+    if not (jnp.issubdtype(dtype, jnp.floating)
+            or jnp.issubdtype(dtype, jnp.complexfloating)):
+        return skip(f"dtype {jnp.dtype(dtype).name}")
     if min(m, k, n) < policy.min_dim:
         return skip(f"min(m,k,n)={min(m, k, n)} < min_dim={policy.min_dim}")
+    backend = policy.backend_for(name)
+    if backend == "dgemm":
+        # A per-site demotion (typically from a precision plan that
+        # found the site pathological): the site passes the gates —
+        # it is *eligible*, and counts toward plan fingerprints — but
+        # executes native.
+        return skip("demoted to dgemm", eligible=True, backend=backend)
     return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
-                True, policy.splits_for(name), "")
+                True, policy.splits_for(name), "", eligible=True,
+                backend=backend, **geom)
 
 
 class _DotDims:
@@ -287,6 +380,12 @@ def _site_dot(backend: GemmBackend, site: Site, dims: "_DotDims",
         y = bmm(dims.pack_lhs(lhs), dims.pack_rhs(rhs), out_dtype)
         return dims.unpack_out(y)
 
+    # Instrumentation backends (the tuner's calibration pass) stage
+    # side effects the custom_vjp machinery cannot carry — and their
+    # output is never differentiated — so they opt out of the wrapper.
+    if not getattr(backend, "supports_vjp", True):
+        return fwd_impl
+
     @jax.custom_vjp
     def dot(lhs, rhs):
         return fwd_impl(lhs, rhs)
@@ -321,10 +420,35 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
     backend = backend or get_backend(policy.backend, policy=policy)
     sites: List[Site] = []
     decisions: Dict[str, Site] = {}
-    for eqn, name in _walk_sites(closed.jaxpr):
-        site = _classify(eqn, policy, name)
+    for eqn, name, mult, spmd in _walk_sites(closed.jaxpr):
+        site = _classify(eqn, policy, name, mult, spmd)
         sites.append(site)
         decisions[name] = site
+    _check_overrides(policy, decisions)
+    # An instrumentation backend (calibration) sees the full site
+    # decisions — shapes, extents, trip multiplicity, SPMD axes —
+    # before the first matmul call, which only carries the site name.
+    observe = getattr(backend, "observe_sites", None)
+    if observe is not None:
+        observe(decisions)
+
+    # Per-site backend routing: a site whose resolved spec differs
+    # from the policy default (plan promotions, e.g. a single site on
+    # the Pallas kernel) gets its own engine; sites on the default
+    # spec share the passed-in instance (stateful engines like
+    # "adaptive" keep one site cache across signatures).  A backend
+    # declaring ``intercepts_all_sites`` (the calibration recorder) is
+    # authoritative for every site regardless of per-site specs.
+    engines: Dict[str, GemmBackend] = {policy.backend: backend}
+    authoritative = getattr(backend, "intercepts_all_sites", False)
+
+    def engine_for(site: Site) -> GemmBackend:
+        if authoritative:
+            return backend
+        spec = site.backend or policy.backend
+        if spec not in engines:
+            engines[spec] = get_backend(spec, policy=policy)
+        return engines[spec]
 
     def read_env(env, v):
         return v.val if isinstance(v, jex_core.Literal) else env[v]
@@ -352,10 +476,15 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
             if prim == "dot_general":
                 site = decisions[f"{prefix}dot{dot_counter[0]}"]
                 dot_counter[0] += 1
-                if site.offloaded:
+                # An authoritative instrumentation backend must see
+                # every *eligible* site — including ones a plan
+                # demoted to native — or re-calibration under a
+                # from_plan policy would re-promote pathological
+                # sites unmeasured.
+                if site.offloaded or (authoritative and site.eligible):
                     dims = _DotDims(eqn.params["dimension_numbers"],
                                     site.lhs_shape, site.rhs_shape)
-                    fn = _site_dot(backend, site, dims,
+                    fn = _site_dot(engine_for(site), site, dims,
                                    eqn.outvars[0].aval.dtype)
                     outvals = [fn(invals[0], invals[1])]
                 else:
@@ -591,6 +720,8 @@ OFFLOAD_CACHE_SIZE = 64
 
 
 def offload(fn, policy: PrecisionPolicy | None = None, *,
+            plan=None, plan_match: str = "strict",
+            backend: GemmBackend | None = None,
             cache_size: int = OFFLOAD_CACHE_SIZE):
     """Wrap ``fn`` so its large matmuls run through the policy backend.
 
@@ -602,6 +733,22 @@ def offload(fn, policy: PrecisionPolicy | None = None, *,
     ``cond``/``shard_map``/``pmap`` bodies, and reverse-mode AD are all
     supported; see the module docstring.
 
+    ``plan`` accepts a :class:`repro.tune.PrecisionPlan`: when no
+    explicit ``policy`` is given, the plan's policy
+    (:meth:`PrecisionPolicy.from_plan`) drives the transform, and with
+    ``plan_match="strict"`` every new signature's traced site set is
+    validated against the plan's fingerprint
+    (:meth:`~repro.tune.PrecisionPlan.validate_sites`) — a drifted
+    program raises instead of silently running mis-tuned.
+    ``plan_match="subset"`` skips the fingerprint check and just
+    applies the overlapping per-site entries (the serve engine runs a
+    train-calibrated plan this way).
+
+    ``backend`` injects the default :class:`GemmBackend` instance
+    instead of resolving ``policy.backend`` — the tuner's calibration
+    pass rides the exact same wrapper/cache machinery this way, with
+    its recording backend swapped in.
+
     The transform cache is a ``cache_size``-bounded LRU (least recently
     *used* signature evicted first), so signature churn — a serving
     loop padding every admission wave to a fresh (batch, prompt) shape
@@ -612,8 +759,21 @@ def offload(fn, policy: PrecisionPolicy | None = None, *,
     the exact :class:`Site` decisions taken for that signature — the
     same objects :func:`site_report` would produce, same names.
     """
-    policy = policy or PrecisionPolicy()
-    backend = get_backend(policy.backend, policy=policy)
+    if plan_match not in ("strict", "subset"):
+        raise ValueError(f"plan_match must be 'strict' or 'subset', "
+                         f"got {plan_match!r}")
+    if policy is None:
+        if plan is not None:
+            # Subset mode exists for functions that trace a subset of
+            # the calibrated sites (serving a train plan): the plan's
+            # unmatched entries are expected there, not typos to warn
+            # about.
+            policy = PrecisionPolicy.from_plan(
+                plan, **({"on_unmatched_site": "ignore"}
+                         if plan_match == "subset" else {}))
+        else:
+            policy = PrecisionPolicy()
+    backend = backend or get_backend(policy.backend, policy=policy)
     if cache_size < 1:
         raise ValueError(f"cache_size must be >= 1, got {cache_size}")
     cache: "OrderedDict[Any, Any]" = OrderedDict()
@@ -628,6 +788,8 @@ def offload(fn, policy: PrecisionPolicy | None = None, *,
             closed, out_shape = jax.make_jaxpr(
                 fn, return_shape=True)(*args, **kwargs)
             transformed, sites = transform_jaxpr(closed, policy, backend)
+            if plan is not None and plan_match == "strict":
+                plan.validate_sites(sites)
             out_tree = jax.tree_util.tree_structure(out_shape)
             entry = cache[key] = (transformed, sites, out_tree)
             while len(cache) > cache_size:
@@ -676,8 +838,8 @@ def site_report(fn, policy: PrecisionPolicy | None = None):
 
     def reporter(*args, **kwargs) -> List[Site]:
         closed = jax.make_jaxpr(fn)(*args, **kwargs)
-        return [_classify(eqn, policy, name)
-                for eqn, name in _walk_sites(closed.jaxpr)]
+        return [_classify(eqn, policy, name, mult, spmd)
+                for eqn, name, mult, spmd in _walk_sites(closed.jaxpr)]
 
     reporter.__name__ = f"site_report({getattr(fn, '__name__', 'fn')})"
     return reporter

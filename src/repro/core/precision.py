@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from typing import Dict, Optional
 
 import jax
@@ -29,6 +30,7 @@ __all__ = [
     "PrecisionPolicy",
     "SiteState",
     "AdaptiveGemm",
+    "canonical_site",
     "predict_splits",
     "splits_for_tolerance",
     "measure_splits",
@@ -38,6 +40,24 @@ __all__ = [
 #: Hard ceiling on the split count: beyond this the slices cover more
 #: mantissa than an f64 input carries and extra splits cannot help.
 MAX_SPLITS = 14
+
+# SPMD scope components of a structural site name ("shmap0/", "pmap1/").
+_SPMD_SCOPE_RE = re.compile(r"(shmap|pmap)\d+")
+
+
+def canonical_site(name: str) -> str:
+    """Strip SPMD scopes from a structural site name.
+
+    ``"shmap0/scan0/dot1" -> "scan0/dot1"``.  A data-parallel
+    ``shard_map`` wraps the *same* program body that runs on a single
+    device, so per-site tuning decisions (split counts, backend
+    overrides, persisted precision plans) are keyed by the canonical
+    name: a plan calibrated under a mesh applies to the single-device
+    program and vice versa.  Control-flow scopes (``scan0/``,
+    ``cond1/br0/``) are part of the program structure and stay.
+    """
+    return "/".join(p for p in name.split("/")
+                    if not _SPMD_SCOPE_RE.fullmatch(p))
 
 
 @dataclasses.dataclass
@@ -62,7 +82,21 @@ class PrecisionPolicy:
       site_splits: per-site split-count overrides, keyed by the stable
         structural site names that :func:`repro.core.intercept.site_report`
         and :func:`repro.core.intercept.offload` share (e.g. ``"dot1"``,
-        ``"scan0/dot0"``).
+        ``"scan0/dot0"``).  Keys may be canonical (SPMD scopes
+        stripped): a ``"scan0/dot0"`` override also applies to the
+        ``"shmap0/scan0/dot0"`` site of the same program run
+        data-parallel.
+      site_backends: per-site backend-spec overrides, same keys.  A
+        site mapped to ``"dgemm"`` is *demoted*: it runs native even
+        though it passes the size gate (how a precision plan disables
+        emulation for a pathological operator).
+      on_unmatched_site: what the offload transform does with a
+        ``site_splits``/``site_backends`` key that matches no site in
+        the traced function — ``"warn"`` (default; typo'd site names
+        should not silently run at default splits), ``"raise"``
+        (strict mode), or ``"ignore"`` (for plans applied to a
+        function that intentionally covers a site subset, e.g. a
+        train-calibrated plan driving the serve engine).
     """
 
     default_splits: int = 6
@@ -71,9 +105,71 @@ class PrecisionPolicy:
     slice_bits: int = SLICE_BITS
     backend: str = "fp64_int8"
     site_splits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    site_backends: Dict[str, str] = dataclasses.field(default_factory=dict)
+    on_unmatched_site: str = "warn"
+
+    def _lookup(self, table: Dict[str, object], site: str):
+        if site in table:
+            return table[site]
+        canon = canonical_site(site)
+        if canon in table:
+            return table[canon]
+        # Keys copied from a *sharded* site_report ("shmap0/scan0/dot0")
+        # must also reach the unsharded program's "scan0/dot0" site:
+        # match on the keys' canonical forms too (tables are small).
+        for key, val in table.items():
+            if canonical_site(key) == canon:
+                return val
+        return None
 
     def splits_for(self, site: str) -> int:
-        return self.site_splits.get(site, self.default_splits)
+        got = self._lookup(self.site_splits, site)
+        return self.default_splits if got is None else got
+
+    def backend_for(self, site: str) -> str:
+        """The backend spec an offloaded ``site`` executes on."""
+        got = self._lookup(self.site_backends, site)
+        return self.backend if got is None else got
+
+    def unmatched_overrides(self, known_sites) -> list:
+        """Override keys that match none of ``known_sites``.
+
+        A key matches a site exactly, or canonically (the key is the
+        SPMD-stripped form of a site name).  The offload transform
+        calls this with the walked site-name set and warns/raises per
+        ``on_unmatched_site``.
+        """
+        known = set(known_sites)
+        known |= {canonical_site(n) for n in known}
+        return sorted(k for k in {*self.site_splits, *self.site_backends}
+                      if k not in known and canonical_site(k) not in known)
+
+    @classmethod
+    def from_plan(cls, plan, **overrides) -> "PrecisionPolicy":
+        """Build the policy a :class:`~repro.tune.PrecisionPlan` encodes.
+
+        The plan is the complete precision configuration: backend
+        family, accumulator, slice bits, size gate, per-site split
+        counts, and per-site demotions to ``"dgemm"``.  ``overrides``
+        replace individual fields (e.g. ``on_unmatched_site="ignore"``
+        when the plan is applied to a function that covers a subset of
+        the calibrated sites).
+        """
+        site_splits = {s.site: s.splits for s in plan.sites
+                       if s.backend != "dgemm"}
+        site_backends = {s.site: s.backend for s in plan.sites
+                         if s.backend != plan.backend}
+        kw = dict(
+            default_splits=max(site_splits.values(), default=6),
+            min_dim=plan.min_dim,
+            accumulator=plan.accumulator,
+            slice_bits=plan.slice_bits,
+            backend=plan.backend,
+            site_splits=site_splits,
+            site_backends=site_backends,
+        )
+        kw.update(overrides)
+        return cls(**kw)
 
 
 def estimate_rel_error(num_splits: int, k: int,

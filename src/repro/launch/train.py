@@ -22,6 +22,22 @@ over the ``dp`` axis, gradients ``pmean``-ed — and it composes with
 body (sites named ``shmap0/...``), so every shard runs the identical
 per-shard Ozaki split schedule.  On CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+
+Precision plans (:mod:`repro.tune`) close the loop:
+
+* ``--tune N --plan path`` calibrates the exact train step this loop
+  would run (N batches, starting from the resume state), solves the
+  cost-optimal per-site split assignment, writes the plan JSON, and
+  exits — no training happens;
+* ``--plan path`` (without ``--tune``) trains under the plan: the
+  step is wrapped in ``offload(step, plan=...)``, the traced site set
+  is validated against the plan fingerprint (a drifted program
+  raises), and every checkpoint records the fingerprint so a later
+  resume under a different precision configuration errors instead of
+  silently continuing at different numerics —
+  ``--allow-plan-change`` turns that error into a loud warning, the
+  explicit path for adopting a freshly tuned plan on an existing
+  lineage.
 """
 
 from __future__ import annotations
@@ -37,7 +53,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend, offload
 from repro.models import Model
-from repro.shard import build_mesh, data_parallel_sharding
+from repro.shard import data_parallel_setup
 from repro.train import AdamW, SyntheticText, checkpoint
 
 __all__ = ["main", "build_train_step", "build_sharded_train_step"]
@@ -118,6 +134,22 @@ def _parse(argv):
     ap.add_argument("--backend", default="",
                     help="GEMM registry spec (e.g. fp64_int8_4); empty "
                          "= native XLA matmuls")
+    ap.add_argument("--plan", default="",
+                    help="precision-plan JSON: with --tune, where the "
+                         "calibrated plan is written; without, the "
+                         "plan the train step runs under")
+    ap.add_argument("--tune", type=int, default=0,
+                    help="calibrate the train step over this many "
+                         "batches, solve, write --plan, and exit "
+                         "(no training)")
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="end-to-end relative error budget for "
+                         "--tune; 0 = derive from the model dtype")
+    ap.add_argument("--allow-plan-change", action="store_true",
+                    help="resume a lineage under a DIFFERENT "
+                         "precision configuration (loud warning "
+                         "instead of an error); the intended path for "
+                         "adopting a plan tuned at the resume state")
     ap.add_argument("--mesh", default="",
                     help="mesh spec for data-parallel training (e.g. "
                          "'dp=8'); empty = single device.  On CPU "
@@ -132,9 +164,73 @@ def _parse(argv):
     return ap.parse_args(argv)
 
 
+def _run_tune(args, train_step, params, opt_state, data, start,
+              batch_sharding) -> None:
+    """``--tune N --plan path``: calibrate, solve, save, report."""
+    from repro.tune import Calibrator, solve_plan
+    from repro.tune.cli import report_plan, tune_policy
+
+    policy = tune_policy(args.backend or "fp64_int8", args.min_dim)
+    print(f"[train] tuning: {args.tune} calibration batch(es) from "
+          f"step {start}, probe s={policy.default_splits}, "
+          f"backend family {policy.backend}")
+    cal = Calibrator(train_step, policy)
+    for i in range(args.tune):
+        batch = jnp.asarray(data.batch(start + i))
+        if batch_sharding is not None:
+            batch = jax.device_put(batch, batch_sharding)
+        cal.run(params, opt_state, batch)
+    plan = solve_plan(cal.result(), budget=args.budget or None)
+    path = plan.save(args.plan)
+    print(report_plan(plan, cal.sites))
+    print(f"[train] plan written to {path}; train with "
+          f"--plan {path}")
+
+
+def _check_resume_plan(ckpt_dir, start: int, plan,
+                       allow_change: bool) -> None:
+    """Refuse to resume across a precision-configuration change.
+
+    The checkpoint metadata carries the plan fingerprint the run was
+    training under; resuming with a different plan (or none, or from
+    a pre-plan checkpoint with a plan now active) would silently
+    continue the loss curve at different numerics — error unless the
+    change is explicit (``--allow-plan-change``, the intended way to
+    adopt a freshly tuned plan on an existing lineage: train
+    plan-less, ``--tune`` at the resume state, resume with ``--plan
+    ... --allow-plan-change`` once).
+    """
+    ckpt_fp = checkpoint.load_meta(ckpt_dir, start).get(
+        "plan_fingerprint")
+    active_fp = plan.fingerprint if plan is not None else None
+    if ckpt_fp == active_fp:
+        return
+    if allow_change:
+        print(f"[train] WARNING: precision configuration changes at "
+              f"step {start}: {ckpt_fp or '<none>'} -> "
+              f"{active_fp or '<none>'} (--allow-plan-change); later "
+              "checkpoints record the new fingerprint")
+        return
+    raise SystemExit(
+        f"[train] checkpoint step {start} in {ckpt_dir} was written "
+        f"under precision plan {ckpt_fp or '<none>'} but this run is "
+        f"configured with {active_fp or '<none>'}: resuming would "
+        "silently change training numerics mid-lineage. Pass the "
+        "matching --plan; or, to adopt this configuration on purpose "
+        "(e.g. a plan just tuned at this resume state), re-run with "
+        "--allow-plan-change.")
+
+
 def main(argv: Optional[Sequence[str]] = None) -> List[float]:
     """Run the loop; returns the per-step losses of THIS invocation."""
     args = _parse(argv)
+    if args.tune and not args.plan:
+        raise SystemExit("[train] --tune needs --plan (where to write "
+                         "the calibrated plan)")
+    if args.plan and args.backend and not args.tune:
+        raise SystemExit("[train] --plan and --backend are both "
+                         "precision configurations; pass one (with "
+                         "--tune, --backend sets the probe family)")
     cfg = get_config(args.arch)
     if args.overrides:
         cfg = cfg.replace(**json.loads(args.overrides))
@@ -151,27 +247,56 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
         print(f"[train] resuming from step {start} in {ckpt_dir}")
         params, opt_state = checkpoint.restore(ckpt_dir, start,
                                                (params, opt_state))
-    if start >= args.steps:
+    if start >= args.steps and not args.tune:
         print(f"[train] checkpoint step {start} >= --steps "
               f"{args.steps}; nothing to do")
         return []
 
     mesh = batch_sharding = None
     if args.mesh:
-        mesh = build_mesh(args.mesh)
-        if args.global_batch % mesh.size:
-            raise SystemExit(
-                f"[train] --global-batch {args.global_batch} is not "
-                f"divisible by mesh size {mesh.size} ({args.mesh})")
-        replicated, batch_sharding = data_parallel_sharding(mesh)
-        params, opt_state = jax.device_put((params, opt_state),
-                                           replicated)
+        mesh, batch_sharding, (params, opt_state) = \
+            data_parallel_setup(args.mesh, args.global_batch,
+                                (params, opt_state))
         print(f"[train] mesh {args.mesh}: {mesh.size} devices, "
               f"per-shard batch {args.global_batch // mesh.size}")
         train_step = build_sharded_train_step(model, opt, mesh)
     else:
         train_step = build_train_step(model, opt)
-    if args.backend:
+
+    if args.tune:
+        _run_tune(args, train_step, params, opt_state, data, start,
+                  batch_sharding)
+        return []
+
+    plan = None
+    if args.plan:
+        from repro.tune import PrecisionPlan
+
+        plan = PrecisionPlan.load(args.plan)
+    if start:
+        _check_resume_plan(ckpt_dir, start, plan,
+                           args.allow_plan_change)
+    ckpt_meta = {
+        "plan_fingerprint": plan.fingerprint if plan is not None
+        else None,
+        # Informational (resume enforcement keys on the fingerprint).
+        "backend": args.backend or None,
+        "plan_path": args.plan or None,
+    }
+
+    if plan is not None:
+        policy = PrecisionPolicy.from_plan(plan)
+        wrapped = offload(train_step, policy, plan=plan,
+                          plan_match="strict")
+        print(f"[train] precision plan {args.plan} "
+              f"({plan.fingerprint}, backend={plan.backend}, "
+              f"{len(plan.sites)} sites"
+              + (f", {len(plan.demoted_sites())} demoted" if
+                 plan.demoted_sites() else "") + ")")
+        print(_describe_sites(
+            wrapped.sites(params, opt_state, data.batch(start))))
+        step_fn = jax.jit(wrapped)
+    elif args.backend:
         # A pinned spec ("fp64_int8_4") is authoritative at execution;
         # mirror it into the policy so the printed site report shows
         # the split count that actually runs.
@@ -206,8 +331,10 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                   f"({(now - t_last) * 1e3:.0f} ms)", flush=True)
             t_last = now
         if (step + 1) % args.ckpt_every == 0:
-            checkpoint.save(ckpt_dir, step + 1, (params, opt_state))
-    checkpoint.save(ckpt_dir, args.steps, (params, opt_state))
+            checkpoint.save(ckpt_dir, step + 1, (params, opt_state),
+                            meta=ckpt_meta)
+    checkpoint.save(ckpt_dir, args.steps, (params, opt_state),
+                    meta=ckpt_meta)
     print(f"[train] done at step {args.steps}; checkpoint in {ckpt_dir}")
     return losses
 

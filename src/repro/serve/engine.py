@@ -14,6 +14,12 @@ neighbours (attention is masked per slot, matmuls are batched but not
 mixed), so a prompt decoded in a busy batch yields the same greedy
 tokens as the same prompt decoded alone — the serve tests assert this.
 
+Tunable-precision serving: pass ``plan=`` (a
+:class:`repro.tune.PrecisionPlan`) or ``policy=`` to run the prefill
+and decode GEMMs through the automatic offload transform — the same
+plan artifact the training loop consumes, applied in subset mode
+because serving traces only the forward sites.
+
 Multi-device serving: pass ``mesh=`` to shard the engine across the
 slot (batch) axis — parameters replicated, the KV cache and every
 prefill/decode batch partitioned over the mesh's first axis, so each
@@ -34,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core import PrecisionPolicy, offload
 from repro.models import Model
 from repro.shard import data_parallel_sharding
 
@@ -67,10 +74,23 @@ class Engine:
       mesh: optional :class:`jax.sharding.Mesh`; shards the slot axis
         over the mesh's first axis (``batch_slots`` must divide by the
         mesh size).
+      plan: optional :class:`repro.tune.PrecisionPlan` loaded at
+        startup — the prefill and decode programs run through the
+        automatic offload transform under the plan's policy.  Plans
+        are usually calibrated on the *training* step, which covers a
+        superset of the serve sites (the backward sites never appear
+        here), so the plan is applied in subset mode: matching
+        canonical sites get their tuned split counts, everything else
+        keeps the plan's defaults, and no staleness error is raised
+        for the training-only entries.
+      policy: optional :class:`~repro.core.PrecisionPolicy` — same
+        effect, explicit policy instead of a plan artifact (wins over
+        ``plan`` for the transform configuration if both are given).
     """
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 512, mesh=None):
+                 max_len: int = 512, mesh=None, plan=None,
+                 policy: Optional[PrecisionPolicy] = None):
         self.model = model
         self.batch_slots = int(batch_slots)
         self.max_len = int(max_len)
@@ -93,12 +113,30 @@ class Engine:
             model.init_cache(self.batch_slots, self.max_len))
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self._next_token = np.zeros(self.batch_slots, np.int32)
+        if policy is None and plan is not None:
+            # Unmatched-site handling must be silent: a train-
+            # calibrated plan legitimately carries backward-pass
+            # entries that no serve program contains.
+            policy = PrecisionPolicy.from_plan(
+                plan, on_unmatched_site="ignore")
+        self.plan = plan
+        self.policy = policy
+
+        def _maybe_offload(fn):
+            if policy is None:
+                return fn
+            return offload(fn, policy, plan=plan, plan_match="subset")
+
         # One compile per (admitted sub-batch size, padded prompt
         # length) pair; decode compiles once.  Fine at example scale —
         # pad admission waves to batch_slots if this ever dominates.
-        self._prefill = jax.jit(
+        # The pre-jit wrappers stay inspectable (``.sites(...)`` when
+        # a policy/plan is active).
+        self._prefill_fn = _maybe_offload(
             lambda p, t, n: model.prefill(p, t, n, self.max_len))
-        self._decode = jax.jit(model.decode_step)
+        self._decode_fn = _maybe_offload(model.decode_step)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
 
     def _pin(self, cache: dict) -> dict:
         """Re-assert the slot-axis sharding on a cache pytree.

@@ -35,6 +35,7 @@ __all__ = [
     "parse_mesh_spec",
     "build_mesh",
     "data_parallel_sharding",
+    "data_parallel_setup",
     "replicate",
     "shard_batch",
 ]
@@ -104,6 +105,31 @@ def data_parallel_sharding(mesh: Mesh, axis: str | None = None
                          f"{mesh.axis_names}")
     return (NamedSharding(mesh, PartitionSpec()),
             NamedSharding(mesh, PartitionSpec(axis)))
+
+
+def data_parallel_setup(spec: str, global_batch: int, state=None):
+    """The CLI recipe: mesh + divisibility guard + replicated state.
+
+    Builds the mesh from ``spec``, verifies ``global_batch`` divides
+    by the mesh size (a ragged shard would change per-shard loss
+    weighting), replicates ``state`` (any pytree, e.g.
+    ``(params, opt_state)``) across it, and returns
+    ``(mesh, batch_sharding, state)``.  Shared by the train and tune
+    entry points so the data-parallel bring-up is written down once.
+
+    Raises ``SystemExit`` (these are CLI drivers) with the virtual-
+    device-friendly message on a non-dividing batch.
+    """
+    mesh = build_mesh(spec)
+    if global_batch % mesh.size:
+        raise SystemExit(
+            f"global batch {global_batch} is not divisible by mesh "
+            f"size {mesh.size} ({spec!r}); pass one (with a batch "
+            "that divides) or drop the mesh")
+    replicated, batch_sharding = data_parallel_sharding(mesh)
+    if state is not None:
+        state = jax.device_put(state, replicated)
+    return mesh, batch_sharding, state
 
 
 def replicate(tree, mesh: Mesh):

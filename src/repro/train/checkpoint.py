@@ -15,6 +15,7 @@ fresh init) from genuine bugs (propagate).
 
 from __future__ import annotations
 
+import json
 import os
 import re
 from pathlib import Path
@@ -23,9 +24,14 @@ from typing import Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointError", "latest_step", "save", "restore"]
+__all__ = ["CheckpointError", "latest_step", "save", "restore",
+           "load_meta"]
 
 _STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+#: Reserved npz key holding the JSON metadata record (precision-plan
+#: fingerprint, backend spec).  Never counted as a pytree leaf.
+_META_KEY = "__meta__"
 
 
 class CheckpointError(RuntimeError):
@@ -51,8 +57,14 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def save(ckpt_dir, step: int, tree) -> Path:
+def save(ckpt_dir, step: int, tree, meta: Optional[dict] = None) -> Path:
     """Write ``tree`` for ``step``; crash-atomic within ``ckpt_dir``.
+
+    ``meta`` (a JSON-serializable dict — notably the active
+    precision-plan fingerprint) rides along inside the ``.npz`` under
+    a reserved key; :func:`restore` ignores it and :func:`load_meta`
+    reads it back, so resume paths can detect a precision-config
+    change instead of silently continuing at different numerics.
 
     ``os.replace`` alone only orders the rename against *other renames*;
     without an ``fsync`` of the temp file the kernel may commit the
@@ -66,6 +78,8 @@ def save(ckpt_dir, step: int, tree) -> Path:
     leaves, _ = jax.tree_util.tree_flatten(tree)
     payload = {f"leaf_{i:05d}": np.asarray(leaf)
                for i, leaf in enumerate(leaves)}
+    if meta is not None:
+        payload[_META_KEY] = np.asarray(json.dumps(meta))
     final = _path(d, step)
     tmp = final.with_name(final.name + ".tmp")
     with open(tmp, "wb") as f:
@@ -99,7 +113,7 @@ def restore(ckpt_dir, step: int, like):
         raise CheckpointError(f"no checkpoint at {path}")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     with np.load(path) as data:
-        keys = sorted(data.files)
+        keys = sorted(k for k in data.files if k != _META_KEY)
         if len(keys) != len(leaves_like):
             raise CheckpointError(
                 f"{path} holds {len(keys)} leaves, expected "
@@ -114,3 +128,30 @@ def restore(ckpt_dir, step: int, like):
                     f"expected {ref.dtype}{list(ref.shape)}")
             loaded.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+def load_meta(ckpt_dir, step: int) -> dict:
+    """The metadata dict saved with the ``step`` checkpoint.
+
+    Returns ``{}`` for checkpoints written without metadata (including
+    every pre-metadata checkpoint — old files stay restorable), and
+    raises :class:`CheckpointError` when the checkpoint itself is
+    missing or its metadata is unreadable.
+    """
+    path = _path(ckpt_dir, step)
+    if not path.exists():
+        raise CheckpointError(f"no checkpoint at {path}")
+    with np.load(path) as data:
+        if _META_KEY not in data.files:
+            return {}
+        raw = str(data[_META_KEY][()])
+    try:
+        meta = json.loads(raw)
+    except json.JSONDecodeError as e:
+        raise CheckpointError(
+            f"{path}: metadata record is not valid JSON ({e})") from None
+    if not isinstance(meta, dict):
+        raise CheckpointError(
+            f"{path}: metadata record is {type(meta).__name__}, "
+            "expected an object")
+    return meta

@@ -1,0 +1,42 @@
+"""repro.tune — precision-plan tuning: calibrate, solve, persist.
+
+The paper's thesis is that emulation precision is a *per-operator*
+knob; this package turns the knob-setting into a first-class offline
+optimization with a persistable artifact:
+
+* :mod:`repro.tune.calibrate` — :class:`Calibrator`, the instrumented
+  pass that records per-site operand statistics and measured error
+  (pmax-shared across mesh axes in sharded runs);
+* :mod:`repro.tune.solve` — :func:`solve_plan`, the cost-optimal
+  split assignment under a composed error budget, plus
+  :func:`count_int8_gemms`, the cost metric;
+* :mod:`repro.tune.plan` — :class:`PrecisionPlan`, the versioned,
+  fingerprinted JSON artifact consumed by
+  :meth:`repro.core.PrecisionPolicy.from_plan` and
+  ``offload(fn, plan=...)``;
+* :mod:`repro.tune.cli` — the ``python -m repro.tune`` flow
+  (``launch/train.py --tune`` runs the same calibrate-and-solve
+  inline).
+"""
+
+from .calibrate import CalibrationResult, Calibrator, SiteRecord
+from .plan import (PLAN_VERSION, PlanError, PlanSite, PlanStaleError,
+                   PrecisionPlan, site_set_fingerprint)
+from .solve import (count_int8_gemms, default_budget, solve_plan,
+                    unpinned_family)
+
+__all__ = [
+    "PLAN_VERSION",
+    "CalibrationResult",
+    "Calibrator",
+    "PlanError",
+    "PlanSite",
+    "PlanStaleError",
+    "PrecisionPlan",
+    "SiteRecord",
+    "count_int8_gemms",
+    "default_budget",
+    "site_set_fingerprint",
+    "solve_plan",
+    "unpinned_family",
+]

@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro.tune`` (see :mod:`repro.tune.cli`)."""
+
+from .cli import main
+
+if __name__ == "__main__":
+    main()

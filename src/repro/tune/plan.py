@@ -1,0 +1,241 @@
+"""PrecisionPlan: the persistable per-site tuning artifact.
+
+A plan is the output of ``calibrate -> solve`` (see
+:mod:`repro.tune.calibrate` / :mod:`repro.tune.solve`): one record per
+eligible GEMM site carrying the solved split count and backend, plus
+the policy-level numerics (backend family, accumulator, slice bits,
+size gate) — everything :meth:`repro.core.PrecisionPolicy.from_plan`
+needs to reconstruct the execution configuration.  It is versioned
+JSON with a **site-set fingerprint** so staleness is detected instead
+of silently mis-tuning:
+
+* the fingerprint hashes the *canonical* site set — SPMD scopes
+  (``shmap0/``, ``pmap0/``) stripped from names, and only the
+  contraction extent ``k`` + dtype of each site, never the free
+  extents — so the same program calibrated under a ``dp=N`` mesh and
+  on a single device fingerprints (and serializes) identically, and a
+  plan survives batch-size changes (which move ``m``, not ``k``);
+* :meth:`PrecisionPlan.validate_sites` recomputes the fingerprint from
+  a freshly traced site set and raises :class:`PlanStaleError` naming
+  the added/removed sites when the program drifted (new layer, changed
+  width, different architecture).
+
+Serialization is deliberately deterministic — sorted keys, sorted
+sites, integers and short strings only — so two calibration runs of
+the same configuration produce byte-identical files (the dp=8 vs
+single-device equivalence the tests assert).  Timestamps, hostnames
+and measured floating-point diagnostics are intentionally *not*
+persisted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.precision import canonical_site
+
+__all__ = [
+    "PLAN_VERSION",
+    "PlanError",
+    "PlanStaleError",
+    "PlanSite",
+    "PrecisionPlan",
+    "site_set_fingerprint",
+]
+
+#: Schema version of the JSON artifact; bump on breaking layout change.
+PLAN_VERSION = 1
+
+
+class PlanError(RuntimeError):
+    """A plan file is malformed, missing, or from an unknown version."""
+
+
+class PlanStaleError(PlanError):
+    """The traced site set no longer matches the plan's fingerprint."""
+
+
+def site_set_fingerprint(sites) -> str:
+    """Fingerprint of the *eligible* site set of a traced function.
+
+    ``sites`` are :class:`repro.core.Site` records (from
+    ``offload(...).sites(...)``/``site_report``) or :class:`PlanSite`
+    entries.  Only sites that pass the dtype/size gates count — a
+    plan-demoted site is still eligible, so demotion never changes the
+    fingerprint — and each contributes its canonical name, contraction
+    extent and dtype.
+    """
+    entries = set()
+    for s in sites:
+        if not getattr(s, "eligible", True):
+            continue
+        name = canonical_site(getattr(s, "name", None) or s.site)
+        dtype = jnp.dtype(s.dtype).name
+        entries.add(f"{name}|k={int(s.k)}|{dtype}")
+    digest = hashlib.sha256("\n".join(sorted(entries)).encode()).hexdigest()
+    return f"sha256:{digest[:16]}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSite:
+    """One solved site: the tuning decision plus its solver inputs.
+
+    ``flops`` is the per-step FLOP volume summed over mesh shards and
+    scan iterations (the cost-model weight); ``lhs_exp``/``rhs_exp``
+    are the calibrated operand max-abs exponents
+    (``ceil(log2(max|X|))``, pmax-shared across the mesh in sharded
+    calibration runs).  ``backend == "dgemm"`` demotes the site to
+    native execution.
+    """
+
+    site: str
+    k: int
+    dtype: str
+    flops: int
+    lhs_exp: int
+    rhs_exp: int
+    splits: int
+    backend: str
+
+    #: ``site_set_fingerprint`` treats every PlanSite as eligible.
+    eligible = True
+
+
+@dataclasses.dataclass
+class PrecisionPlan:
+    """The versioned per-site precision configuration artifact."""
+
+    fingerprint: str
+    backend: str
+    accumulator: str
+    slice_bits: int
+    min_dim: int
+    budget: float
+    budget_met: bool
+    probe_splits: int
+    sites: Tuple[PlanSite, ...]
+    version: int = PLAN_VERSION
+
+    def __post_init__(self):
+        self.sites = tuple(sorted(self.sites, key=lambda s: s.site))
+
+    # -- derived views ------------------------------------------------
+
+    def site_splits(self) -> dict:
+        """Canonical-site -> split-count map (demoted sites excluded)."""
+        return {s.site: s.splits for s in self.sites
+                if s.backend != "dgemm"}
+
+    def demoted_sites(self) -> list:
+        return sorted(s.site for s in self.sites if s.backend == "dgemm")
+
+    def describe(self) -> str:
+        lines = [f"PrecisionPlan {self.fingerprint} "
+                 f"(v{self.version}, backend={self.backend}, "
+                 f"budget={self.budget:.2e}"
+                 f"{'' if self.budget_met else ' NOT MET'})"]
+        for s in self.sites:
+            action = ("dgemm (demoted)" if s.backend == "dgemm"
+                      else f"s={s.splits}")
+            lines.append(f"  {s.site}: k={s.k} {s.dtype} "
+                         f"flops={s.flops:.3g} -> {action}")
+        return "\n".join(lines)
+
+    # -- staleness ----------------------------------------------------
+
+    def validate_sites(self, sites) -> None:
+        """Raise :class:`PlanStaleError` if ``sites`` drifted.
+
+        ``sites`` is a freshly traced site list; the comparison is on
+        the canonical fingerprint, and the error message names the
+        site entries that appeared/disappeared so the fix ("re-tune")
+        is obvious.
+        """
+        current = site_set_fingerprint(sites)
+        if current == self.fingerprint:
+            return
+        planned = {f"{s.site}(k={s.k},{s.dtype})" for s in self.sites}
+        traced = {f"{canonical_site(s.name)}(k={s.k},"
+                  f"{jnp.dtype(s.dtype).name})"
+                  for s in sites if getattr(s, "eligible", True)}
+        raise PlanStaleError(
+            f"plan fingerprint {self.fingerprint} does not match the "
+            f"traced site set ({current}): the program changed since "
+            f"calibration. Sites only in plan: "
+            f"{sorted(planned - traced) or '[]'}; only in trace: "
+            f"{sorted(traced - planned) or '[]'}. Re-run calibration "
+            "(launch/train.py --tune / python -m repro.tune) to "
+            "refresh the plan.")
+
+    # -- (de)serialization --------------------------------------------
+
+    def to_json(self) -> str:
+        """Deterministic JSON: byte-identical for identical plans."""
+        doc = {
+            "version": self.version,
+            "fingerprint": self.fingerprint,
+            "backend": self.backend,
+            "accumulator": self.accumulator,
+            "slice_bits": self.slice_bits,
+            "min_dim": self.min_dim,
+            "budget": self.budget,
+            "budget_met": self.budget_met,
+            "probe_splits": self.probe_splits,
+            "sites": [dataclasses.asdict(s) for s in self.sites],
+        }
+        return json.dumps(doc, indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "PrecisionPlan":
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise PlanError(f"plan is not valid JSON: {e}") from None
+        if not isinstance(doc, dict):
+            raise PlanError(f"plan must be a JSON object, got "
+                            f"{type(doc).__name__}")
+        version = doc.get("version")
+        if version != PLAN_VERSION:
+            raise PlanError(
+                f"plan version {version!r} is not supported (this "
+                f"build reads version {PLAN_VERSION}); re-run "
+                "calibration to regenerate it")
+        required = ["fingerprint", "backend", "accumulator",
+                    "slice_bits", "min_dim", "budget", "budget_met",
+                    "probe_splits", "sites"]
+        missing = [kk for kk in required if kk not in doc]
+        if missing:
+            raise PlanError(f"plan is missing required keys: {missing}")
+        try:
+            sites = tuple(PlanSite(**s) for s in doc["sites"])
+        except TypeError as e:
+            raise PlanError(f"malformed plan site entry: {e}") from None
+        return cls(fingerprint=doc["fingerprint"],
+                   backend=doc["backend"],
+                   accumulator=doc["accumulator"],
+                   slice_bits=int(doc["slice_bits"]),
+                   min_dim=int(doc["min_dim"]),
+                   budget=float(doc["budget"]),
+                   budget_met=bool(doc["budget_met"]),
+                   probe_splits=int(doc["probe_splits"]),
+                   sites=sites,
+                   version=int(version))
+
+    def save(self, path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path) -> "PrecisionPlan":
+        path = Path(path)
+        if not path.exists():
+            raise PlanError(f"no precision plan at {path}")
+        return cls.from_json(path.read_text())

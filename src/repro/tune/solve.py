@@ -1,0 +1,224 @@
+"""Cost-optimal per-site split solving.
+
+The solver turns a :class:`~repro.tune.calibrate.CalibrationResult`
+into a :class:`~repro.tune.plan.PrecisionPlan`: given an end-to-end
+relative-error budget, assign each site the split count that minimizes
+the INT8 GEMM cost
+
+    cost(s_i) = n_pairs(s_i) * flops_i        (n_pairs = s(s+1)/2)
+
+subject to the composed (first-order additive) error bound
+
+    sum_i  err_i(s_i)  <=  budget.
+
+Per-site error curves are *calibrated*: the a-priori model
+``4 sqrt(k) 2**(-w s)`` (:func:`repro.core.precision.estimate_rel_error`)
+deliberately over-estimates, so where calibration measured the actual
+probe error the curve is anchored there and extrapolated geometrically
+(one split buys exactly ``slice_bits`` mantissa bits).  This is the
+mechanism behind the paper's pitch: a uniform split count sized by the
+worst-case model pays for mantissa bits most sites never need, while
+the calibrated solve hits the same end-to-end tolerance with fewer
+INT8 GEMMs.
+
+Sites whose measured error *exceeds* the model by ``demote_ratio``
+(operands the Ozaki row/column scaling cannot represent well) are
+demoted to the native ``dgemm`` backend — emulating them at any split
+count would poison the budget.
+
+The assignment itself is greedy marginal analysis — repeatedly grant
+one extra split to the site with the best error-reduction per unit
+cost — which is near-optimal here because each split cuts a site's
+error by the huge constant ``2**slice_bits`` while cost grows only
+linearly in ``s``.  Ties break on the site name, so the solve is
+deterministic given identical inputs (the dp=8 == single-device
+byte-identity relies on this).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Optional
+
+import jax.numpy as jnp
+
+from repro.core.backends import _SPLITS_RE
+from repro.core.intercept import Site
+from repro.core.ozaki import num_pair_gemms
+from repro.core.precision import MAX_SPLITS, estimate_rel_error
+
+from .calibrate import CalibrationResult, SiteRecord
+from .plan import PlanSite, PrecisionPlan
+
+__all__ = ["solve_plan", "default_budget", "count_int8_gemms",
+           "unpinned_family"]
+
+
+def unpinned_family(spec: str) -> str:
+    """Strip a pinned split count from a backend spec.
+
+    ``"fp64_int8_6" -> "fp64_int8"``.  A plan owns the per-site split
+    counts, so the policy it reconstructs must carry the *family* spec
+    — a pinned spec would be authoritative and override the plan.
+    """
+    head, sep, arg = spec.partition(":")
+    m = _SPLITS_RE.fullmatch(head)
+    if m:
+        head = m.group("family")
+    return head + (sep + arg if sep else "")
+
+
+def default_budget(records: Iterable[SiteRecord],
+                   scale: float = 32.0) -> float:
+    """End-to-end error budget derived from the site dtypes.
+
+    Emulating tighter than the strictest participating dtype can
+    represent buys nothing: the default budget is ``scale`` times that
+    dtype's machine epsilon (32 ulps of headroom for the composed
+    bound's slack), e.g. ~3.8e-6 for a float32 model and ~7.1e-15 for
+    float64.
+    """
+    records = list(records)
+    # A mixed f32/f64 program is bounded end-to-end by its lowest-
+    # precision parts: budget to the *largest* participating eps.
+    # jnp.finfo, not np.finfo: it also resolves the ml_dtypes types
+    # ("bfloat16") that np.finfo rejects.
+    eps = max(float(jnp.finfo(jnp.dtype(r.dtype)).eps)
+              for r in records) \
+        if records else float(jnp.finfo(jnp.float32).eps)
+    return float(scale * eps)
+
+
+def _site_err(rec: SiteRecord, splits: int, slice_bits: int) -> float:
+    """Calibrated error curve: measured probe anchored, else a-priori."""
+    model = estimate_rel_error(splits, rec.k, slice_bits)
+    if rec.measured_rel is None:
+        return model
+    anchored = max(rec.measured_rel, 1e-30) * \
+        2.0 ** (slice_bits * (rec.probe_splits - splits))
+    # The anchor refines the model downward (the model is deliberately
+    # conservative); a measurement *above* the model marks a
+    # pathological site, which demotion handles — never let it push
+    # the curve above the a-priori bound.
+    return min(model, anchored)
+
+
+def solve_plan(result: CalibrationResult, *,
+               budget: Optional[float] = None,
+               demote_ratio: float = 100.0,
+               max_splits: int = MAX_SPLITS) -> PrecisionPlan:
+    """Solve the per-site split assignment and build the plan.
+
+    Args:
+      result: calibration output (site records + fingerprint).
+      budget: end-to-end relative-error budget; default
+        :func:`default_budget` of the calibrated dtypes.
+      demote_ratio: a site measured worse than ``demote_ratio`` times
+        its a-priori model at the probe split count is demoted to
+        ``dgemm``.
+      max_splits: per-site ceiling; if the budget is unreachable even
+        at the ceiling the plan is still produced with
+        ``budget_met=False``.
+    """
+    policy = result.policy
+    slice_bits = policy.slice_bits
+    records = list(result.records)
+    if budget is None:
+        budget = default_budget(records)
+    budget = float(budget)
+    if budget <= 0:
+        raise ValueError(f"budget must be positive, got {budget}")
+
+    family = unpinned_family(policy.backend)
+    demoted: Dict[str, SiteRecord] = {}
+    tunable: Dict[str, SiteRecord] = {}
+    for rec in records:
+        model = estimate_rel_error(rec.probe_splits, rec.k, slice_bits)
+        if (rec.measured_rel is not None
+                and rec.measured_rel > demote_ratio * model):
+            demoted[rec.site] = rec
+        else:
+            tunable[rec.site] = rec
+
+    # Greedy marginal analysis, deterministic: everything starts at
+    # one split; each round grants one split to the site with the best
+    # error-drop per added INT8 FLOP, until the composed bound meets
+    # the budget (or every site hits the ceiling).
+    splits = {name: 1 for name in tunable}
+    errs = {name: _site_err(rec, 1, slice_bits)
+            for name, rec in tunable.items()}
+    total = math.fsum(errs.values())
+    while total > budget:
+        best_name, best_gain = None, -1.0
+        for name, rec in sorted(tunable.items()):
+            s = splits[name]
+            if s >= max_splits:
+                continue
+            drop = errs[name] - _site_err(rec, s + 1, slice_bits)
+            cost = (num_pair_gemms(s + 1) - num_pair_gemms(s)) \
+                * max(rec.flops, 1)
+            gain = drop / cost
+            if gain > best_gain:
+                best_name, best_gain = name, gain
+        if best_name is None:
+            break  # every tunable site is at the ceiling
+        splits[best_name] += 1
+        new_err = _site_err(tunable[best_name], splits[best_name],
+                            slice_bits)
+        total += new_err - errs[best_name]
+        errs[best_name] = new_err
+
+    sites = []
+    for name, rec in tunable.items():
+        sites.append(PlanSite(
+            site=name, k=rec.k, dtype=rec.dtype, flops=rec.flops,
+            lhs_exp=rec.lhs_exp or 0, rhs_exp=rec.rhs_exp or 0,
+            splits=splits[name], backend=family))
+    for name, rec in demoted.items():
+        sites.append(PlanSite(
+            site=name, k=rec.k, dtype=rec.dtype, flops=rec.flops,
+            lhs_exp=rec.lhs_exp or 0, rhs_exp=rec.rhs_exp or 0,
+            splits=0, backend="dgemm"))
+
+    return PrecisionPlan(
+        fingerprint=result.fingerprint,
+        backend=family,
+        accumulator=policy.accumulator,
+        slice_bits=slice_bits,
+        min_dim=policy.min_dim,
+        budget=budget,
+        budget_met=total <= budget,
+        probe_splits=result.probe_splits,
+        sites=tuple(sites))
+
+
+def count_int8_gemms(sites: Iterable[Site],
+                     splits_for=None) -> int:
+    """Per-step INT8 GEMM count of a site-decision list.
+
+    Sums, over offloaded sites, the Ozaki pair count ``s(s+1)/2``
+    times the batch extent, the static trip multiplicity (enclosing
+    ``scan`` lengths), and 4 for complex sites (the four-real-GEMM
+    decomposition).  The comparison metric the paper story rests on:
+    a tuned plan must beat uniform splits here at equal accuracy.
+    Counts are per shard — mesh axes multiply GEMM instances across
+    devices, not per-device work — so compare like against like.
+
+    ``splits_for(site) -> int | None`` overrides each site's recorded
+    split count (``None`` = the site runs native and contributes 0),
+    which lets one traced site list be costed under several
+    assignments — e.g. a solved plan vs the uniform policy it was
+    calibrated with — without re-tracing the program.
+    """
+    total = 0
+    for site in sites:
+        if not site.offloaded:
+            continue
+        s = site.splits if splits_for is None else splits_for(site)
+        if s is None:
+            continue
+        cplx = 4 if jnp.issubdtype(jnp.dtype(site.dtype),
+                                   jnp.complexfloating) else 1
+        total += (num_pair_gemms(s) * max(site.batch, 1)
+                  * site.mult * cplx)
+    return total

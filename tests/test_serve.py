@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import LMConfig
+from repro.core import PrecisionPolicy
 from repro.models import Model
 from repro.serve import Engine, Request
 
@@ -79,6 +80,39 @@ class TestEngine:
             eng.run([Request(prompt=[], max_new_tokens=2)])
         with pytest.raises(ValueError, match="max_new_tokens"):
             eng.run([Request(prompt=[1, 2], max_new_tokens=0)])
+
+    def test_plan_at_startup_matches_unplanned_tokens(self,
+                                                      model_params):
+        """The engine loads a (train-calibrated) precision plan at
+        startup and serves through the offload transform in subset
+        mode; at solved split counts the emulation error is far below
+        greedy-argmax resolution, so the tokens match exactly."""
+        from repro.tune import Calibrator, solve_plan
+
+        model, params = model_params
+        batch = jnp.asarray(np.random.default_rng(9).integers(
+            1, SMALL.vocab_size, (2, 33)))
+        pol = PrecisionPolicy(default_splits=6, min_dim=32)
+        cal = Calibrator(model.loss, pol)
+        cal.run(params, batch)
+        plan = solve_plan(cal.result(), budget=1e-9)
+
+        prompts = _prompts([5, 9, 16, 12], seed=6)
+        reqs = lambda: [Request(prompt=p, max_new_tokens=6)  # noqa: E731
+                        for p in prompts]
+        planned = Engine(model, params, batch_slots=4, max_len=64,
+                         plan=plan)
+        # The plan actually reaches the transform: the prefill program
+        # offloads its projection GEMMs under the plan's size gate.
+        tok = jnp.asarray(np.zeros((4, 16), np.int32))
+        lengths = jnp.asarray(np.full((4,), 16, np.int32))
+        psites = planned._prefill_fn.sites(params, tok, lengths)
+        assert sum(s.offloaded for s in psites) > 0
+        done_plan = planned.run(reqs())
+        done_bare = Engine(model, params, batch_slots=4,
+                           max_len=64).run(reqs())
+        for rp, rb in zip(done_plan, done_bare):
+            assert rp.out == rb.out
 
     def test_slot_reuse_is_clean(self, model_params):
         """A slot's stale cache from a previous occupant must not

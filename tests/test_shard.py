@@ -158,6 +158,42 @@ class TestShardMapOffload:
                                    atol=1e-8)
 
 
+class TestPallasUnderShardMap:
+    """ROADMAP open item: the Pallas kernel (interpret mode off-TPU)
+    inside a shard_map body — per-site routing through the fused
+    kernel must survive the SPMD rebuild."""
+
+    @needs8
+    def test_pallas_backend_inside_shard_map(self, mesh8):
+        f = _dp_matmul(mesh8)
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.standard_normal((8 * 32, 160)))
+        b = jnp.asarray(rng.standard_normal((160, 160)))
+        pol_pallas = PrecisionPolicy(backend="pallas_int8_6",
+                                     default_splits=6, min_dim=32)
+        pol_jnp = PrecisionPolicy(backend="fp64_int8_6",
+                                  default_splits=6, min_dim=32)
+        w_pallas = offload(f, pol_pallas)
+        sites = w_pallas.sites(a, b)
+        assert [s.name for s in sites] == ["shmap0/dot0",
+                                           "shmap0/dot1"]
+        assert all(s.offloaded and s.backend == "pallas_int8_6"
+                   for s in sites)
+        y_pal, s_pal = w_pallas(a, b)
+        # Interpret-mode Pallas is bit-identical to the jnp df32 path
+        # (the kernel tests pin this for 2-D; here it must hold on the
+        # per-shard blocks under shard_map too) ...
+        y_jnp, s_jnp = offload(f, pol_jnp)(a, b)
+        np.testing.assert_array_equal(np.asarray(y_pal),
+                                      np.asarray(y_jnp))
+        # ... and close to the native product.
+        ref_y, ref_s = f(a, b)
+        np.testing.assert_allclose(np.asarray(y_pal),
+                                   np.asarray(ref_y), rtol=0,
+                                   atol=1e-7)
+        assert float(s_pal) == pytest.approx(float(ref_s), abs=1e-5)
+
+
 class TestPmapOffload:
     def test_pmap_body_offloaded(self):
         ndev = jax.device_count()

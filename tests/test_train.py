@@ -137,6 +137,22 @@ class TestCheckpoint:
                                {"x": jnp.zeros((2,)),
                                 "y": jnp.zeros((2,))})
 
+    def test_meta_roundtrip_and_restore_ignores_it(self, tmp_path):
+        tree = {"x": jnp.arange(3, dtype=jnp.float32)}
+        meta = {"plan_fingerprint": "sha256:abc", "backend": None}
+        checkpoint.save(tmp_path, 2, tree, meta=meta)
+        assert checkpoint.load_meta(tmp_path, 2) == meta
+        # The reserved meta key is not a leaf: restore is unaffected.
+        _assert_trees_bit_identical(
+            tree, checkpoint.restore(tmp_path, 2, tree))
+
+    def test_meta_absent_is_empty(self, tmp_path):
+        # Pre-metadata checkpoints (no meta arg) read back as {}.
+        checkpoint.save(tmp_path, 1, {"x": jnp.zeros((2,))})
+        assert checkpoint.load_meta(tmp_path, 1) == {}
+        with pytest.raises(CheckpointError, match="no checkpoint"):
+            checkpoint.load_meta(tmp_path, 9)
+
     def test_kill_and_resume_bit_identical(self, tmp_path):
         """3 steps + resume to 6 == uninterrupted 6, to the bit."""
         dir_a, dir_b = tmp_path / "a", tmp_path / "b"
@@ -156,6 +172,56 @@ class TestCheckpoint:
         d = tmp_path / "c"
         train_main(_cli(2, d, ckpt_every=10))
         assert train_main(_cli(2, d, ckpt_every=10)) == []
+
+    def test_resume_enforces_plan_fingerprint(self, tmp_path):
+        """A checkpoint lineage pins its precision plan: resuming with
+        a different configuration errors instead of silently training
+        at different numerics."""
+        d = tmp_path / "planned"
+        plan_path = tmp_path / "plan.json"
+        tune_args = _cli(2, d) + ["--tune", "1", "--plan",
+                                  str(plan_path), "--min-dim", "32"]
+        assert train_main(tune_args) == []     # calibrate only
+        assert plan_path.exists()
+        assert checkpoint.latest_step(d) is None  # tune never trains
+
+        plan_cli = _cli(2, d) + ["--plan", str(plan_path)]
+        losses = train_main(plan_cli)
+        assert len(losses) == 2
+        meta = checkpoint.load_meta(d, 2)
+        from repro.tune import PrecisionPlan
+
+        assert meta["plan_fingerprint"] == \
+            PrecisionPlan.load(plan_path).fingerprint
+
+        # Resuming without the plan (or, symmetrically, with a plan on
+        # a plan-less lineage) must refuse with a clear message.
+        with pytest.raises(SystemExit, match="precision plan"):
+            train_main(_cli(4, d))
+        bare = tmp_path / "bare"
+        train_main(_cli(2, bare))
+        with pytest.raises(SystemExit, match="precision plan"):
+            train_main(_cli(4, bare) + ["--plan", str(plan_path)])
+
+        # The matching plan resumes cleanly.
+        assert len(train_main(_cli(4, d) +
+                              ["--plan", str(plan_path)])) == 2
+
+        # The explicit upgrade path: adopting a freshly tuned plan on
+        # a plan-less lineage with --allow-plan-change proceeds (with
+        # a warning) and records the new fingerprint going forward.
+        assert len(train_main(_cli(4, bare) +
+                              ["--plan", str(plan_path),
+                               "--allow-plan-change"])) == 2
+        assert checkpoint.load_meta(bare, 4)["plan_fingerprint"] == \
+            meta["plan_fingerprint"]
+
+    def test_tune_requires_plan_and_excludes_backend(self, tmp_path):
+        with pytest.raises(SystemExit, match="--plan"):
+            train_main(_cli(2, tmp_path) + ["--tune", "1"])
+        with pytest.raises(SystemExit, match="one"):
+            train_main(_cli(2, tmp_path) +
+                       ["--plan", "p.json", "--backend", "fp64_int8_4"])
 
 
 class TestOffloadTraining:
