@@ -109,9 +109,15 @@ def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
             continue
         skipped = [n for n in (metric, ref) if _is_skip_row(n, derived)]
         if skipped:
+            # Surface the benchmark's own skip_reason so the CI log
+            # explains WHY the row degraded, not just that it did.
+            reasons = "; ".join(
+                f"{n}: {derived.get(n, {}).get('skip_reason', 'no skip_reason recorded')}"
+                for n in skipped)
             failures.append(
                 f"gate {metric}/{ref}: {', '.join(skipped)} is a skip "
-                "row from a degraded bench run — no timing to compare")
+                "row from a degraded bench run — no timing to compare "
+                f"({reasons})")
             continue
         if rows[ref] <= 0:
             failures.append(f"gate {metric}/{ref}: reference is 0")

@@ -23,6 +23,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _skip_reason(e) -> str:
+    """One CSV-safe clause explaining a degraded row.
+
+    The ``derived`` column is ``;``-separated ``key=value`` pairs on a
+    ``,``-separated CSV line, so the reason must not contain either —
+    collapse them (and newlines) to spaces and bound the length.
+    """
+    msg = " ".join(str(e).replace(",", " ").replace(";", " ").split())
+    return (msg[:77] + "...") if len(msg) > 80 else (msg or "unknown")
+
+
 def _timeit(fn, *args, reps=5) -> float:
     jax.block_until_ready(fn(*args))  # compile/warm
     t0 = time.perf_counter()
@@ -125,7 +136,8 @@ def bench_kernel_pallas(quick: bool) -> list:
                     f"backend=interpret(correctness-only)")
     except Exception as e:  # noqa: BLE001 - degrade, don't fail
         rows.append(f"ozaki6_pallas_interpret_{n},0,"
-                    f"skipped={type(e).__name__}")
+                    f"skipped={type(e).__name__};"
+                    f"skip_reason={_skip_reason(e)}")
     return rows
 
 
@@ -244,16 +256,18 @@ def bench_roofline(quick: bool) -> list:
     try:
         from repro.analysis.roofline import analyze_cell
     except Exception as e:  # noqa: BLE001 - degrade, don't fail
-        return [f"roofline_skipped,0,analysis unavailable "
-                f"({type(e).__name__})"]
+        return [f"roofline_skipped,0,skipped={type(e).__name__};"
+                f"skip_reason=analysis unavailable: {_skip_reason(e)}"]
 
     rows = []
     outdir = Path("runs/dryrun")
     if not outdir.exists():
-        return ["roofline_skipped,0,no runs/dryrun artifacts"]
+        return ["roofline_skipped,0,skipped=1;"
+                "skip_reason=no runs/dryrun artifacts"]
     sel = sorted(outdir.glob("*pod16x16.json"))
     if not sel:
-        return ["roofline_skipped,0,no *pod16x16.json artifacts in "
+        return ["roofline_skipped,0,skipped=1;"
+                "skip_reason=no *pod16x16.json artifacts in "
                 "runs/dryrun"]
     for j in sel[: 6 if quick else 1000]:
         try:
@@ -294,15 +308,31 @@ def bench_lm_step(quick: bool) -> list:
 
     us = _timeit(jax.jit(step), params, state, batch, reps=3)
     rows = [f"lm_step_native,{us:.0f},tiny;tokens=256"]
+    # The emulated rows run with per-site telemetry ON (the repro.obs
+    # site-event hook counting every executed site into a registry) so
+    # the existing lm_step_fp64_int8_4/lm_step_native ratio gate also
+    # bounds the observability overhead — if the hook ever gets
+    # expensive, the bench-regression gate catches it.
+    from repro.obs import Registry
+
     for s in (4,) if quick else (4, 6):
+        registry = Registry()
         pol = PrecisionPolicy(backend=f"fp64_int8_{s}",
                               default_splits=s, min_dim=128)
-        wrapped = offload(step, pol)
+        wrapped = offload(
+            step, pol,
+            on_site_event=lambda p: registry.counter(
+                "site_exec", site=p["site"]).inc())
         n_on = sum(site.offloaded
                    for site in wrapped.sites(params, state, batch))
         us = _timeit(jax.jit(wrapped), params, state, batch, reps=3)
+        jax.effects_barrier()  # drain async site-event callbacks
+        n_events = int(sum(
+            m["value"] for m in registry.snapshot()
+            if m["name"] == "site_exec"))
         rows.append(f"lm_step_fp64_int8_{s},{us:.0f},"
-                    f"tiny;tokens=256;offloaded_sites={n_on}")
+                    f"tiny;tokens=256;offloaded_sites={n_on};"
+                    f"site_events={n_events}")
     return rows
 
 
@@ -374,16 +404,42 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--metrics-dir", default="runs/metrics/bench",
+                    help="repro.obs run dir mirroring every CSV row "
+                         "as a bench_row event; 'none' disables")
     args, _ = ap.parse_known_args()
-    print("name,us_per_call,derived")
-    for bench in BENCHES:
-        if args.only and args.only not in bench.__name__:
-            continue
+
+    metrics = None
+    if args.metrics_dir != "none":
+        from repro.obs import MetricsRun
+
+        metrics = MetricsRun(args.metrics_dir)
+
+    def emit(row: str) -> None:
+        print(row, flush=True)
+        if metrics is None:
+            return
+        parts = row.split(",", 2)
         try:
-            for row in bench(args.quick):
-                print(row, flush=True)
-        except Exception as e:
-            print(f"{bench.__name__}_FAILED,0,{e!r}", flush=True)
+            us = float(parts[1]) if len(parts) > 1 else None
+        except ValueError:
+            us = None
+        metrics.event("bench_row", name=parts[0], us_per_call=us,
+                      derived=parts[2] if len(parts) > 2 else "")
+
+    print("name,us_per_call,derived")
+    try:
+        for bench in BENCHES:
+            if args.only and args.only not in bench.__name__:
+                continue
+            try:
+                for row in bench(args.quick):
+                    emit(row)
+            except Exception as e:
+                emit(f"{bench.__name__}_FAILED,0,{e!r}")
+    finally:
+        if metrics is not None:
+            metrics.close()
 
 
 if __name__ == "__main__":

@@ -32,6 +32,9 @@ def main():
                          "decode GEMMs under the tuned plan")
     ap.add_argument("--ckpt-dir", default="",
                     help="override the per-preset checkpoint dir")
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry dir (repro.obs JSONL); default: "
+                         "<ckpt-dir>/metrics; 'none' disables")
     args = ap.parse_args()
 
     arch, overrides, _, _ = PRESETS[args.preset]
@@ -58,18 +61,30 @@ def main():
         plan = PrecisionPlan.load(args.plan)
         print(f"[serve] precision plan {args.plan} "
               f"({plan.fingerprint}, {len(plan.sites)} sites)")
+    metrics = None
+    if args.metrics_dir != "none":
+        from repro.obs import MetricsRun
+
+        metrics = MetricsRun(args.metrics_dir
+                             or f"{ckpt_dir}/metrics")
     engine = Engine(model, params, batch_slots=4, max_len=512,
-                    plan=plan)
+                    plan=plan, metrics=metrics)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=[int(t) for t in
                             rng.integers(1, cfg.vocab_size, 16)],
                     max_new_tokens=args.max_new_tokens)
             for _ in range(4)]
-    done = engine.run(reqs)
+    try:
+        done = engine.run(reqs)
+    finally:
+        if metrics is not None:
+            metrics.close()
     for i, r in enumerate(done):
         print(f"[serve] req{i}: prompt[:4]={r.prompt[:4]} "
               f"-> out[:8]={r.out[:8]} ({len(r.out)} tokens)")
     assert all(len(r.out) > 0 for r in done)
+    if metrics is not None:
+        print(f"[serve] telemetry: {metrics.sink.path}")
     print("[serve] OK")
 
 

@@ -408,7 +408,8 @@ def _site_dot(backend: GemmBackend, site: Site, dims: "_DotDims",
 
 
 def transform_jaxpr(closed, policy: PrecisionPolicy,
-                    backend: GemmBackend | None = None):
+                    backend: GemmBackend | None = None,
+                    on_site_event=None):
     """Rewrite ``closed`` (a ``ClosedJaxpr``) for emulated execution.
 
     Returns ``(transformed, sites)``: a new ``ClosedJaxpr`` with every
@@ -416,6 +417,25 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
     (wrapped in its ``custom_vjp``), and the :class:`Site` decisions in
     discovery order.  The transform runs once; evaluating the result
     (``jax.core.eval_jaxpr``) never re-traces the user function.
+
+    ``on_site_event`` is the telemetry hook: a host callable receiving
+    one static payload dict (site name, backend spec, splits, shapes,
+    extents, flops) per *execution* of each offloaded site.  It is
+    staged as a ``jax.debug.callback`` **sibling** of the site's
+    backend call — never inside the ``custom_vjp`` (debug effects
+    cannot stage through custom-derivative rules) — so inside a
+    ``scan`` body it fires once per iteration and inside a
+    ``shard_map``/``pmap`` body once per mesh shard.  The callback
+    deliberately carries **zero** array operands: the payload is
+    host-built at transform time, the hook adds no device compute, and
+    — load-bearing, not just an optimization — an operand-carrying
+    callback inside a loop body is *dropped entirely* by JAX's
+    partial-eval when the loop is differentiated, whereas the
+    zero-operand form is merely hoisted.  Consequence: under
+    reverse-mode AD a loop-body site reports once per step, not once
+    per iteration (forward-only programs count exactly).  Handlers run
+    on the runtime's callback threads and must follow the
+    np-asarray-first rule: never launch jax ops from the handler.
     """
     backend = backend or get_backend(policy.backend, policy=policy)
     sites: List[Site] = []
@@ -449,6 +469,25 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
         if spec not in engines:
             engines[spec] = get_backend(spec, policy=policy)
         return engines[spec]
+
+    def stage_site_event(site: Site) -> None:
+        # Static payload, built host-side once per staging; the
+        # callback takes zero array operands so it costs nothing on
+        # device and cannot trip the np-asarray-first rule itself.
+        payload = {
+            "site": site.name,
+            "backend": site.backend or policy.backend,
+            "splits": int(site.splits),
+            "lhs_shape": list(site.lhs_shape),
+            "rhs_shape": list(site.rhs_shape),
+            "dtype": site.dtype.name,
+            "m": site.m, "k": site.k, "n": site.n,
+            "batch": site.batch, "mult": site.mult,
+            "spmd_axes": [list(ax) for ax in site.spmd_axes],
+            "flops": site.flops,
+        }
+        jax.debug.callback(
+            lambda _p=payload: on_site_event(dict(_p)))
 
     def read_env(env, v):
         return v.val if isinstance(v, jex_core.Literal) else env[v]
@@ -486,6 +525,8 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
                                     site.lhs_shape, site.rhs_shape)
                     fn = _site_dot(engine_for(site), site, dims,
                                    eqn.outvars[0].aval.dtype)
+                    if on_site_event is not None and site.offloaded:
+                        stage_site_event(site)
                     outvals = [fn(invals[0], invals[1])]
                 else:
                     outvals = [eqn.primitive.bind(*invals, **eqn.params)]
@@ -722,6 +763,7 @@ OFFLOAD_CACHE_SIZE = 64
 def offload(fn, policy: PrecisionPolicy | None = None, *,
             plan=None, plan_match: str = "strict",
             backend: GemmBackend | None = None,
+            on_site_event=None,
             cache_size: int = OFFLOAD_CACHE_SIZE):
     """Wrap ``fn`` so its large matmuls run through the policy backend.
 
@@ -748,6 +790,15 @@ def offload(fn, policy: PrecisionPolicy | None = None, *,
     instead of resolving ``policy.backend`` — the tuner's calibration
     pass rides the exact same wrapper/cache machinery this way, with
     its recording backend swapped in.
+
+    ``on_site_event`` enables per-site execution telemetry: a host
+    callable invoked (via ``jax.debug.callback``) with a static payload
+    dict once per execution of each offloaded site — per ``scan``
+    iteration, per mesh shard; see :func:`transform_jaxpr`.  Pass
+    ``MetricsRun.site_event_handler()`` from :mod:`repro.obs` to count
+    executions into a metrics run.  Note debug callbacks are
+    asynchronous: call ``jax.effects_barrier()`` before reading
+    anything the handler accumulates.
 
     The transform cache is a ``cache_size``-bounded LRU (least recently
     *used* signature evicted first), so signature churn — a serving
@@ -787,7 +838,8 @@ def offload(fn, policy: PrecisionPolicy | None = None, *,
             stats["misses"] += 1
             closed, out_shape = jax.make_jaxpr(
                 fn, return_shape=True)(*args, **kwargs)
-            transformed, sites = transform_jaxpr(closed, policy, backend)
+            transformed, sites = transform_jaxpr(
+                closed, policy, backend, on_site_event=on_site_event)
             if plan is not None and plan_match == "strict":
                 plan.validate_sites(sites)
             out_tree = jax.tree_util.tree_structure(out_shape)

@@ -53,10 +53,15 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend, offload
 from repro.models import Model
+from repro.obs import MetricsRun, NumericsMonitor, get_logger
 from repro.shard import data_parallel_setup
 from repro.train import AdamW, SyntheticText, checkpoint
+from repro.tune.solve import count_int8_gemms
 
 __all__ = ["main", "build_train_step", "build_sharded_train_step"]
+
+log = get_logger("train")
+offload_log = get_logger("offload")
 
 
 def build_train_step(model: Model, opt: AdamW):
@@ -106,18 +111,17 @@ def build_sharded_train_step(model: Model, opt: AdamW, mesh,
                      out_specs=(P(), P(), P()))
 
 
-def _describe_sites(sites) -> str:
+def _describe_sites(sites) -> None:
     on = [s for s in sites if s.offloaded]
     off = [s for s in sites if not s.offloaded]
-    lines = [f"[offload] {len(on)} of {len(sites)} dot_general sites "
-             "routed through the registry backend:"]
+    offload_log.info(f"{len(on)} of {len(sites)} dot_general sites "
+                     "routed through the registry backend:")
     for s in on:
-        lines.append(f"[offload]   {s}")
+        offload_log.info(f"  {s}")
     if off:
-        lines.append(f"[offload] {len(off)} sites stay native "
-                     "(size/dtype gate), e.g. "
-                     + "; ".join(repr(s) for s in off[:3]))
-    return "\n".join(lines)
+        offload_log.info(f"{len(off)} sites stay native "
+                         "(size/dtype gate), e.g. "
+                         + "; ".join(repr(s) for s in off[:3]))
 
 
 def _parse(argv):
@@ -161,6 +165,14 @@ def _parse(argv):
                     help="default: runs/ckpt/<arch>")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-dir", default="",
+                    help="telemetry directory (repro.obs JSONL runs); "
+                         "default: <ckpt-dir>/metrics; 'none' disables")
+    ap.add_argument("--numerics-every", type=int, default=25,
+                    help="NumericsMonitor period: every Nth step "
+                         "re-measure the probe site's realized error "
+                         "against dgemm (emulated runs with telemetry "
+                         "on); 0 disables")
     return ap.parse_args(argv)
 
 
@@ -168,12 +180,12 @@ def _run_tune(args, train_step, params, opt_state, data, start,
               batch_sharding) -> None:
     """``--tune N --plan path``: calibrate, solve, save, report."""
     from repro.tune import Calibrator, solve_plan
-    from repro.tune.cli import report_plan, tune_policy
+    from repro.tune.cli import log_report, report_plan, tune_policy
 
     policy = tune_policy(args.backend or "fp64_int8", args.min_dim)
-    print(f"[train] tuning: {args.tune} calibration batch(es) from "
-          f"step {start}, probe s={policy.default_splits}, "
-          f"backend family {policy.backend}")
+    log.info(f"tuning: {args.tune} calibration batch(es) from "
+             f"step {start}, probe s={policy.default_splits}, "
+             f"backend family {policy.backend}")
     cal = Calibrator(train_step, policy)
     for i in range(args.tune):
         batch = jnp.asarray(data.batch(start + i))
@@ -182,9 +194,8 @@ def _run_tune(args, train_step, params, opt_state, data, start,
         cal.run(params, opt_state, batch)
     plan = solve_plan(cal.result(), budget=args.budget or None)
     path = plan.save(args.plan)
-    print(report_plan(plan, cal.sites))
-    print(f"[train] plan written to {path}; train with "
-          f"--plan {path}")
+    log_report(get_logger("tune"), report_plan(plan, cal.sites))
+    log.info(f"plan written to {path}; train with --plan {path}")
 
 
 def _check_resume_plan(ckpt_dir, start: int, plan,
@@ -206,10 +217,10 @@ def _check_resume_plan(ckpt_dir, start: int, plan,
     if ckpt_fp == active_fp:
         return
     if allow_change:
-        print(f"[train] WARNING: precision configuration changes at "
-              f"step {start}: {ckpt_fp or '<none>'} -> "
-              f"{active_fp or '<none>'} (--allow-plan-change); later "
-              "checkpoints record the new fingerprint")
+        log.warning(f"precision configuration changes at "
+                    f"step {start}: {ckpt_fp or '<none>'} -> "
+                    f"{active_fp or '<none>'} (--allow-plan-change); "
+                    "later checkpoints record the new fingerprint")
         return
     raise SystemExit(
         f"[train] checkpoint step {start} in {ckpt_dir} was written "
@@ -244,12 +255,12 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
     opt_state = opt.init(params)
     start = checkpoint.latest_step(ckpt_dir) or 0
     if start:
-        print(f"[train] resuming from step {start} in {ckpt_dir}")
+        log.info(f"resuming from step {start} in {ckpt_dir}")
         params, opt_state = checkpoint.restore(ckpt_dir, start,
                                                (params, opt_state))
     if start >= args.steps and not args.tune:
-        print(f"[train] checkpoint step {start} >= --steps "
-              f"{args.steps}; nothing to do")
+        log.info(f"checkpoint step {start} >= --steps "
+                 f"{args.steps}; nothing to do")
         return []
 
     mesh = batch_sharding = None
@@ -257,8 +268,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
         mesh, batch_sharding, (params, opt_state) = \
             data_parallel_setup(args.mesh, args.global_batch,
                                 (params, opt_state))
-        print(f"[train] mesh {args.mesh}: {mesh.size} devices, "
-              f"per-shard batch {args.global_batch // mesh.size}")
+        log.info(f"mesh {args.mesh}: {mesh.size} devices, "
+                 f"per-shard batch {args.global_batch // mesh.size}")
         train_step = build_sharded_train_step(model, opt, mesh)
     else:
         train_step = build_train_step(model, opt)
@@ -284,18 +295,31 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
         "plan_path": args.plan or None,
     }
 
+    # Telemetry (repro.obs): one MetricsRun per invocation, scoped to
+    # the checkpoint lineage by default so test/tmp runs stay in tmp.
+    metrics = None
+    if args.metrics_dir != "none":
+        metrics = MetricsRun(args.metrics_dir
+                             or f"{ckpt_dir}/metrics")
+        metrics.event("config", arch=args.arch, steps=args.steps,
+                      start=start, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      backend=args.backend or None,
+                      plan=args.plan or None, mesh=args.mesh or None)
+
+    on_site_event = metrics.site_event_handler() if metrics else None
+    monitor = None
+    policy = None
     if plan is not None:
         policy = PrecisionPolicy.from_plan(plan)
         wrapped = offload(train_step, policy, plan=plan,
-                          plan_match="strict")
-        print(f"[train] precision plan {args.plan} "
-              f"({plan.fingerprint}, backend={plan.backend}, "
-              f"{len(plan.sites)} sites"
-              + (f", {len(plan.demoted_sites())} demoted" if
-                 plan.demoted_sites() else "") + ")")
-        print(_describe_sites(
-            wrapped.sites(params, opt_state, data.batch(start))))
-        step_fn = jax.jit(wrapped)
+                          plan_match="strict",
+                          on_site_event=on_site_event)
+        log.info(f"precision plan {args.plan} "
+                 f"({plan.fingerprint}, backend={plan.backend}, "
+                 f"{len(plan.sites)} sites"
+                 + (f", {len(plan.demoted_sites())} demoted" if
+                    plan.demoted_sites() else "") + ")")
     elif args.backend:
         # A pinned spec ("fp64_int8_4") is authoritative at execution;
         # mirror it into the policy so the printed site report shows
@@ -306,36 +330,75 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                                  min_dim=args.min_dim,
                                  **({"default_splits": pinned}
                                     if pinned else {}))
-        wrapped = offload(train_step, policy)
-        print(f"[train] backend={args.backend} min_dim={args.min_dim} "
-              f"({cfg.num_params()/1e6:.1f}M params)")
-        print(_describe_sites(
-            wrapped.sites(params, opt_state, data.batch(start))))
+        wrapped = offload(train_step, policy,
+                          on_site_event=on_site_event)
+        log.info(f"backend={args.backend} min_dim={args.min_dim} "
+                 f"({cfg.num_params()/1e6:.1f}M params)")
+    if policy is not None:
+        sites = wrapped.sites(params, opt_state, data.batch(start))
+        _describe_sites(sites)
         step_fn = jax.jit(wrapped)
+        int8_per_step = count_int8_gemms(sites)
+        if metrics is not None:
+            metrics.declare_sites(sites)
+            if args.numerics_every > 0:
+                monitor = NumericsMonitor(
+                    train_step, plan=plan,
+                    policy=None if plan is not None else policy,
+                    every=args.numerics_every,
+                    registry=metrics.registry, sink=metrics.sink,
+                    log=log)
     else:
         step_fn = jax.jit(train_step)
+        int8_per_step = 0
 
     losses: List[float] = []
     t_last = time.perf_counter()
-    for step in range(start, args.steps):
-        batch = jnp.asarray(data.batch(step))
-        if batch_sharding is not None:
-            batch = jax.device_put(batch, batch_sharding)
-        params, opt_state, loss = step_fn(params, opt_state, batch)
-        losses.append(float(loss))
-        if step == start or (step + 1) % args.log_every == 0 \
-                or step + 1 == args.steps:
-            now = time.perf_counter()
-            print(f"[train] step {step + 1}/{args.steps} "
-                  f"loss={losses[-1]:.4f} "
-                  f"({(now - t_last) * 1e3:.0f} ms)", flush=True)
-            t_last = now
-        if (step + 1) % args.ckpt_every == 0:
-            checkpoint.save(ckpt_dir, step + 1, (params, opt_state),
-                            meta=ckpt_meta)
-    checkpoint.save(ckpt_dir, args.steps, (params, opt_state),
-                    meta=ckpt_meta)
-    print(f"[train] done at step {args.steps}; checkpoint in {ckpt_dir}")
+    try:
+        for step in range(start, args.steps):
+            batch = jnp.asarray(data.batch(step))
+            if batch_sharding is not None:
+                batch = jax.device_put(batch, batch_sharding)
+            if monitor is not None:
+                monitor.maybe_check(step, params, opt_state, batch)
+            t_step = time.perf_counter()
+            if metrics is not None:
+                with metrics.tracer.span("train_step", step=step + 1):
+                    params, opt_state, loss = step_fn(params,
+                                                      opt_state, batch)
+                    # Blocking inside the span so it measures the whole
+                    # device step, not just the dispatch.
+                    losses.append(float(loss))
+            else:
+                params, opt_state, loss = step_fn(params, opt_state,
+                                                  batch)
+                losses.append(float(loss))
+            step_ms = (time.perf_counter() - t_step) * 1e3
+            if metrics is not None:
+                metrics.event("step", step=step + 1, loss=losses[-1],
+                              ms=step_ms, int8_gemms=int8_per_step)
+            if step == start or (step + 1) % args.log_every == 0 \
+                    or step + 1 == args.steps:
+                now = time.perf_counter()
+                log.info(f"step {step + 1}/{args.steps} "
+                         f"loss={losses[-1]:.4f} "
+                         f"({(now - t_last) * 1e3:.0f} ms)")
+                t_last = now
+            if (step + 1) % args.ckpt_every == 0:
+                checkpoint.save(ckpt_dir, step + 1,
+                                (params, opt_state), meta=ckpt_meta)
+        checkpoint.save(ckpt_dir, args.steps, (params, opt_state),
+                        meta=ckpt_meta)
+    finally:
+        if metrics is not None:
+            # Drain async site-event callbacks before the final
+            # registry snapshot, so execution counts are complete.
+            jax.effects_barrier()
+            metrics.close()
+    log.info(f"done at step {args.steps}; checkpoint in {ckpt_dir}")
+    if metrics is not None:
+        log.info(f"telemetry: {metrics.sink.path} (inspect with "
+                 f"python -m repro.obs report {metrics.directory})")
     return losses
 
 

@@ -1,0 +1,46 @@
+"""``repro.obs``: unified telemetry for the BLAS-offload stack.
+
+One lightweight, dependency-free subsystem threaded through every
+layer of the repo:
+
+* :mod:`repro.obs.log` — leveled stderr logger (``REPRO_LOG_LEVEL``)
+  whose INFO rendering matches the pre-existing ``[train]``-style
+  prints;
+* :mod:`repro.obs.registry` — labeled counters/gauges/histograms,
+  safe to update from ``jax.debug.callback`` threads;
+* :mod:`repro.obs.trace` — span tracer with Chrome-trace export;
+* :mod:`repro.obs.events` — JSONL structured-event sink and the
+  run-scoped :class:`MetricsRun` bundle the entry points construct;
+* :mod:`repro.obs.numerics` — :class:`NumericsMonitor`, the runtime
+  drift check that closes the calibrate→train loop;
+* ``python -m repro.obs`` — the ``report``/``export`` CLI
+  (:mod:`repro.obs.cli`).
+"""
+
+from .events import EventSink, MetricsRun, json_safe, load_runs, \
+    read_events
+from .log import LEVELS, Logger, get_logger, reset_logger
+from .numerics import NumericsMonitor, NumericsReport
+from .registry import Counter, Gauge, Histogram, Registry
+from .trace import Tracer, to_chrome, write_chrome_trace
+
+__all__ = [
+    "Counter",
+    "EventSink",
+    "Gauge",
+    "Histogram",
+    "LEVELS",
+    "Logger",
+    "MetricsRun",
+    "NumericsMonitor",
+    "NumericsReport",
+    "Registry",
+    "Tracer",
+    "get_logger",
+    "json_safe",
+    "load_runs",
+    "read_events",
+    "reset_logger",
+    "to_chrome",
+    "write_chrome_trace",
+]

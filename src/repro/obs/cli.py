@@ -1,0 +1,248 @@
+"""``python -m repro.obs`` — report and export telemetry runs.
+
+Two subcommands over a metrics directory of ``events-NNNN.jsonl``
+files (as written by :class:`repro.obs.events.MetricsRun`):
+
+``report <dir>``
+    Aggregate the latest run (or every run with ``--all``) into
+    human-readable tables: the per-site decision/execution table
+    (backend, splits, flops, executions, realized numerics error),
+    the per-step loss/timing summary, numerics-drift checks, serve
+    per-request latencies, and span totals.  ``--check`` turns the
+    report into a CI gate: exit nonzero unless every *offloaded*
+    declared site recorded at least one execution.
+
+``export <dir> [-o trace.json]``
+    Convert the run's span events into a Chrome Trace Event JSON file
+    that ``chrome://tracing`` and https://ui.perfetto.dev open
+    directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from .events import load_runs, read_events
+from .trace import write_chrome_trace
+
+__all__ = ["main"]
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(headers: List[str], rows: List[List], out) -> None:
+    cells = [[_fmt(c) for c in row] for row in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells
+              else len(h) for i, h in enumerate(headers)]
+    print("  " + "  ".join(h.ljust(w)
+                           for h, w in zip(headers, widths)), file=out)
+    for row in cells:
+        print("  " + "  ".join(c.ljust(w)
+                               for c, w in zip(row, widths)), file=out)
+
+
+def _by_type(events: List[dict]) -> Dict[str, List[dict]]:
+    grouped: Dict[str, List[dict]] = {}
+    for ev in events:
+        grouped.setdefault(ev.get("type", "?"), []).append(ev)
+    return grouped
+
+
+def _site_exec_counts(grouped) -> Dict[str, float]:
+    """Per-site execution counts: registry snapshot if the run closed
+    cleanly, else the first-execution ``site_exec`` records (>= 1)."""
+    counts: Dict[str, float] = {}
+    for ev in grouped.get("metric", ()):
+        if ev.get("kind") == "counter" and ev.get("name") == "site_exec":
+            site = (ev.get("labels") or {}).get("site", "?")
+            counts[site] = counts.get(site, 0) + float(ev.get("value", 0))
+    if not counts:
+        for ev in grouped.get("site_exec", ()):
+            site = ev.get("site", "?")
+            counts[site] = counts.get(site, 0) + 1
+    return counts
+
+
+def _report_run(run_id: str, events: List[dict], out,
+                check: bool = False) -> int:
+    grouped = _by_type(events)
+    failures = 0
+    print(f"run {run_id}: {len(events)} events", file=out)
+
+    decls = grouped.get("site_decl", [])
+    execs = _site_exec_counts(grouped)
+    # Last realized error per site from the numerics checks.
+    realized: Dict[str, float] = {}
+    for ev in grouped.get("numerics", ()):
+        realized[ev.get("site", "?")] = ev.get("realized_rel")
+    if decls:
+        print("sites:", file=out)
+        rows = []
+        for d in sorted(decls, key=lambda d: d.get("site", "")):
+            site = d.get("site", "?")
+            rows.append([site, d.get("backend") or "native",
+                         d.get("splits"), d.get("offloaded"),
+                         d.get("dtype"),
+                         f"{d.get('lhs_shape')}x{d.get('rhs_shape')}",
+                         float(d.get("flops", 0)),
+                         execs.get(site), realized.get(site)])
+        _table(["site", "backend", "splits", "offload", "dtype",
+                "shapes", "flops", "execs", "realized_rel"], rows, out)
+        if check:
+            for d in decls:
+                if d.get("offloaded") and not execs.get(d.get("site")):
+                    print(f"CHECK FAIL: offloaded site "
+                          f"{d.get('site')!r} recorded no executions",
+                          file=out)
+                    failures += 1
+    elif check:
+        print("CHECK FAIL: no site_decl events in this run (was the "
+              "run launched without a backend/plan, or killed before "
+              "site discovery?)", file=out)
+        failures += 1
+
+    steps = grouped.get("step", [])
+    if steps:
+        losses = [s["loss"] for s in steps if s.get("loss") is not None]
+        mss = [s["ms"] for s in steps if s.get("ms") is not None]
+        gemms = [s.get("int8_gemms") for s in steps
+                 if s.get("int8_gemms") is not None]
+        print("steps:", file=out)
+        _table(["steps", "first_loss", "last_loss", "mean_ms",
+                "int8_gemms/step"],
+               [[len(steps),
+                 losses[0] if losses else None,
+                 losses[-1] if losses else None,
+                 sum(mss) / len(mss) if mss else None,
+                 gemms[-1] if gemms else None]], out)
+
+    checks = grouped.get("numerics", [])
+    if checks:
+        print("numerics:", file=out)
+        _table(["checks", "site", "splits", "max_realized_rel",
+                "budget", "drift"],
+               [[len(checks), checks[-1].get("site"),
+                 checks[-1].get("splits"),
+                 max(c.get("realized_rel", 0.0) for c in checks),
+                 checks[-1].get("budget"),
+                 sum(1 for c in checks if c.get("drift"))]], out)
+
+    reqs = grouped.get("request", [])
+    if reqs:
+        def mean(key):
+            vals = [r[key] for r in reqs if r.get(key) is not None]
+            return sum(vals) / len(vals) if vals else None
+
+        print("serve:", file=out)
+        _table(["requests", "mean_admission_s", "mean_prefill_s",
+                "mean_ttft_s", "mean_tokens_per_s"],
+               [[len(reqs), mean("admission_wait_s"),
+                 mean("prefill_s"), mean("ttft_s"),
+                 mean("tokens_per_s")]], out)
+
+    rows = grouped.get("bench_row", [])
+    if rows:
+        print("bench:", file=out)
+        _table(["name", "us_per_call", "derived"],
+               [[r.get("name"), r.get("us_per_call"),
+                 r.get("derived")] for r in rows], out)
+
+    spans = grouped.get("span", [])
+    if spans:
+        agg: Dict[str, List[float]] = {}
+        for s in spans:
+            agg.setdefault(s.get("name", "?"), []).append(
+                float(s.get("dur", 0.0)) / 1e3)
+        print("spans:", file=out)
+        _table(["name", "count", "total_ms", "mean_ms"],
+               [[n, len(d), sum(d), sum(d) / len(d)]
+                for n, d in sorted(agg.items())], out)
+
+    if check and not failures:
+        print("CHECK OK: every offloaded site recorded executions",
+              file=out)
+    return failures
+
+
+def _select_runs(directory: str, all_runs: bool,
+                 run_id: Optional[str]) -> Dict[str, List[dict]]:
+    path = Path(directory)
+    if path.is_file():
+        return {path.stem.partition("-")[2] or path.stem:
+                read_events(path)}
+    runs = load_runs(path)
+    if not runs:
+        raise SystemExit(f"no events-*.jsonl runs under {directory}")
+    if run_id is not None:
+        if run_id not in runs:
+            raise SystemExit(f"run {run_id!r} not found; have "
+                             f"{sorted(runs)}")
+        return {run_id: runs[run_id]}
+    if all_runs:
+        return runs
+    last = sorted(runs)[-1]
+    return {last: runs[last]}
+
+
+def main(argv=None, out=None) -> int:
+    out = out or sys.stdout
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Report and export repro telemetry runs.")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    rep = sub.add_parser("report", help="aggregate a metrics dir "
+                         "into tables")
+    rep.add_argument("directory", help="metrics dir (or one "
+                     "events-*.jsonl file)")
+    rep.add_argument("--all", action="store_true",
+                     help="report every run, not just the latest")
+    rep.add_argument("--run", default=None, help="report this run id")
+    rep.add_argument("--check", action="store_true",
+                     help="exit nonzero unless every offloaded site "
+                     "recorded at least one execution")
+
+    exp = sub.add_parser("export", help="write a Chrome trace from "
+                         "the run's span events")
+    exp.add_argument("directory", help="metrics dir (or one "
+                     "events-*.jsonl file)")
+    exp.add_argument("--all", action="store_true",
+                     help="merge spans from every run")
+    exp.add_argument("--run", default=None, help="export this run id")
+    exp.add_argument("-o", "--output", default="trace.json",
+                     help="output path (default trace.json)")
+
+    args = parser.parse_args(argv)
+    runs = _select_runs(args.directory, args.all, args.run)
+
+    if args.cmd == "report":
+        failures = 0
+        for i, (run_id, events) in enumerate(sorted(runs.items())):
+            if i:
+                print("", file=out)
+            failures += _report_run(run_id, events, out,
+                                    check=args.check)
+        return 1 if failures else 0
+
+    events = [ev for _, evs in sorted(runs.items()) for ev in evs]
+    path = write_chrome_trace(events, args.output)
+    n = sum(1 for ev in events if ev.get("type") == "span")
+    print(f"wrote {n} spans from {len(runs)} run(s) to {path} "
+          "(open in chrome://tracing or https://ui.perfetto.dev)",
+          file=out)
+    return 0

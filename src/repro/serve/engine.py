@@ -32,6 +32,7 @@ engine emit exactly the tokens the single-device engine would.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import List, Optional
 
@@ -42,9 +43,12 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import PrecisionPolicy, offload
 from repro.models import Model
+from repro.obs import get_logger
 from repro.shard import data_parallel_sharding
 
 __all__ = ["Engine", "Request"]
+
+log = get_logger("serve")
 
 
 @dataclasses.dataclass
@@ -59,6 +63,19 @@ class Request:
 
 def _round_up(n: int, mult: int = 8) -> int:
     return ((n + mult - 1) // mult) * mult
+
+
+class _NullSpan:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+#: Shared no-op context for the metrics-off path (contextlib.
+#: nullcontext allocates per use; the engine ticks in a hot loop).
+_NULL_SPAN = _NullSpan()
 
 
 class Engine:
@@ -86,12 +103,19 @@ class Engine:
       policy: optional :class:`~repro.core.PrecisionPolicy` — same
         effect, explicit policy instead of a plan artifact (wins over
         ``plan`` for the transform configuration if both are given).
+      metrics: optional :class:`repro.obs.MetricsRun` — per-request
+        latency telemetry (admission wait, prefill time, time to first
+        token, decode throughput), slot-occupancy gauges, prefill/
+        decode tracer spans, and (under a plan/policy) per-site GEMM
+        execution counts, all streamed into the run's JSONL file.
     """
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 512, mesh=None, plan=None,
-                 policy: Optional[PrecisionPolicy] = None):
+                 policy: Optional[PrecisionPolicy] = None,
+                 metrics=None):
         self.model = model
+        self.metrics = metrics
         self.batch_slots = int(batch_slots)
         self.max_len = int(max_len)
         self.mesh = mesh
@@ -122,10 +146,18 @@ class Engine:
         self.plan = plan
         self.policy = policy
 
+        # Per-request latency bookkeeping, keyed by request identity
+        # (Request is a plain mutable dataclass, not hashable by value).
+        self._rstats: dict = {}
+        self._sites_declared = False
+
         def _maybe_offload(fn):
             if policy is None:
                 return fn
-            return offload(fn, policy, plan=plan, plan_match="subset")
+            hook = (metrics.site_event_handler()
+                    if metrics is not None else None)
+            return offload(fn, policy, plan=plan, plan_match="subset",
+                           on_site_event=hook)
 
         # One compile per (admitted sub-batch size, padded prompt
         # length) pair; decode compiles once.  Fine at example scale —
@@ -192,24 +224,62 @@ class Engine:
         if self.mesh is not None:
             tokens = jax.device_put(tokens, self._slot_sharding)
             lengths = jax.device_put(lengths, self._slot_sharding)
-        sub_cache, last_logits = self._prefill(self.params, tokens,
-                                               lengths)
-        # Scatter the real sub-batch rows into the shared slots.
-        jidx = jnp.asarray(idx)
-        n = len(batch)
-        self.cache = self._pin({
-            "k": self.cache["k"].at[:, jidx].set(sub_cache["k"][:, :n]),
-            "v": self.cache["v"].at[:, jidx].set(sub_cache["v"][:, :n]),
-            "length": self.cache["length"].at[jidx].set(
-                sub_cache["length"][:n]),
-        })
-        first = np.asarray(self.model.greedy(last_logits))
+        if (self.metrics is not None and self.policy is not None
+                and not self._sites_declared):
+            # First prefill: record the site decisions (same records
+            # ``site_report`` would produce) so ``repro.obs report
+            # --check`` can hold execution counts against them.  Warms
+            # the same transform-cache entry the call below hits.
+            self.metrics.declare_sites(
+                self._prefill_fn.sites(self.params, tokens, lengths))
+            self._sites_declared = True
+        t_admit = time.perf_counter()
+        span = (self.metrics.tracer.span("prefill", rows=rows,
+                                         padded_len=P)
+                if self.metrics is not None else _NULL_SPAN)
+        with span:
+            sub_cache, last_logits = self._prefill(self.params, tokens,
+                                                   lengths)
+            # Scatter the real sub-batch rows into the shared slots.
+            jidx = jnp.asarray(idx)
+            n = len(batch)
+            self.cache = self._pin({
+                "k": self.cache["k"].at[:, jidx].set(
+                    sub_cache["k"][:, :n]),
+                "v": self.cache["v"].at[:, jidx].set(
+                    sub_cache["v"][:, :n]),
+                "length": self.cache["length"].at[jidx].set(
+                    sub_cache["length"][:n]),
+            })
+            # np.asarray blocks on the device work, so the span (and
+            # prefill_s) covers the whole prefill, not the dispatch.
+            first = np.asarray(self.model.greedy(last_logits))
+        prefill_s = time.perf_counter() - t_admit
+        if self.metrics is not None:
+            log.debug(f"admitted wave of {len(batch)} "
+                      f"(padded {rows}x{P}) in {prefill_s * 1e3:.1f} ms")
         for row, (slot, req) in enumerate(batch):
+            st = self._rstats.get(id(req))
+            if st is not None:
+                st["admission_wait_s"] = t_admit - st["t_enqueue"]
+                st["prefill_s"] = prefill_s
+                st["t_admit"] = t_admit
+                self.metrics.registry.histogram(
+                    "serve_admission_wait_s").observe(
+                    st["admission_wait_s"])
+                self.metrics.registry.histogram(
+                    "serve_prefill_s").observe(prefill_s)
             self.slots[slot] = req
             self._emit(slot, req, int(first[row]))
 
     def _emit(self, slot: int, req: Request, token: int) -> None:
         req.out.append(token)
+        st = self._rstats.get(id(req))
+        if st is not None and "ttft_s" not in st:
+            # First emitted token (from the prefill's last logits).
+            st["ttft_s"] = time.perf_counter() - st["t_enqueue"]
+            self.metrics.registry.histogram(
+                "serve_ttft_s").observe(st["ttft_s"])
         self._next_token[slot] = token
         eos = self.model.cfg.eos_id
         length_next = len(req.prompt) + len(req.out)
@@ -218,24 +288,58 @@ class Engine:
                 or length_next >= self.max_len):
             req.done = True
             self.slots[slot] = None
+            if st is not None:
+                self._finish(req, st)
+
+    def _finish(self, req: Request, st: dict) -> None:
+        """Finalize one request's telemetry: the ``request`` event."""
+        gen_s = time.perf_counter() - st.get("t_admit",
+                                             st["t_enqueue"])
+        tokens_per_s = len(req.out) / max(gen_s, 1e-9)
+        self.metrics.registry.counter("serve_tokens").inc(len(req.out))
+        self.metrics.event(
+            "request", prompt_len=len(req.prompt),
+            new_tokens=len(req.out),
+            admission_wait_s=st.get("admission_wait_s"),
+            prefill_s=st.get("prefill_s"), ttft_s=st.get("ttft_s"),
+            decode_ticks=st.get("decode_ticks", 0),
+            tokens_per_s=tokens_per_s)
+        log.debug(f"request done: {len(req.prompt)} prompt + "
+                  f"{len(req.out)} new tokens, "
+                  f"ttft {st.get('ttft_s', 0) * 1e3:.1f} ms, "
+                  f"{tokens_per_s:.1f} tok/s")
+        self._rstats.pop(id(req), None)
 
     def _tick(self) -> None:
         active = np.array([r is not None for r in self.slots])
         if not active.any():
             return
+        if self.metrics is not None:
+            self.metrics.registry.gauge("serve_slot_occupancy").set(
+                int(active.sum()))
+            for req in self.slots:
+                st = (self._rstats.get(id(req))
+                      if req is not None else None)
+                if st is not None:
+                    st["decode_ticks"] = st.get("decode_ticks", 0) + 1
         tokens = jnp.asarray(self._next_token)
         active_dev = jnp.asarray(active)
         if self.mesh is not None:
             tokens = jax.device_put(tokens, self._slot_sharding)
             active_dev = jax.device_put(active_dev,
                                         self._slot_sharding)
-        cache, logits = self._decode(self.params, self.cache,
-                                     tokens, active_dev)
-        # Re-pin (no-copy when the layout already matches) so the KV
-        # cache stays slot-partitioned even if output-sharding
-        # propagation ever produces a different layout.
-        self.cache = self._pin(cache)
-        nxt = np.asarray(self.model.greedy(logits))
+        span = (self.metrics.tracer.span("decode_tick",
+                                         active=int(active.sum()))
+                if self.metrics is not None else _NULL_SPAN)
+        with span:
+            cache, logits = self._decode(self.params, self.cache,
+                                         tokens, active_dev)
+            # Re-pin (no-copy when the layout already matches) so the
+            # KV cache stays slot-partitioned even if output-sharding
+            # propagation ever produces a different layout.
+            self.cache = self._pin(cache)
+            # Blocks, so the span covers the device step.
+            nxt = np.asarray(self.model.greedy(logits))
         for slot, req in enumerate(list(self.slots)):
             if req is not None:
                 self._emit(slot, req, int(nxt[slot]))
@@ -249,7 +353,16 @@ class Engine:
         are admitted as earlier ones finish.
         """
         queue = deque(requests)
+        if self.metrics is not None:
+            t0 = time.perf_counter()
+            for req in requests:
+                self._rstats[id(req)] = {"t_enqueue": t0}
         while queue or any(r is not None for r in self.slots):
             self._admit(queue)
             self._tick()
+        if self.metrics is not None:
+            self.metrics.registry.gauge("serve_slot_occupancy").set(0)
+            # Site-event callbacks (plan/policy runs) are async; drain
+            # them so execution counters are complete at flush time.
+            jax.effects_barrier()
         return requests

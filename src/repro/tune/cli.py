@@ -29,13 +29,16 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend
 from repro.models import Model
+from repro.obs import get_logger
 from repro.shard import data_parallel_setup
 from repro.train import AdamW, SyntheticText
 
 from .calibrate import Calibrator
 from .solve import count_int8_gemms, solve_plan, unpinned_family
 
-__all__ = ["main", "tune_policy", "report_plan"]
+__all__ = ["main", "tune_policy", "report_plan", "log_report"]
+
+log = get_logger("tune")
 
 
 def tune_policy(backend_spec: str, min_dim: int) -> PrecisionPolicy:
@@ -71,18 +74,29 @@ def report_plan(plan, sites) -> str:
     n_tuned = count_int8_gemms(sites, splits_for=tuned_splits)
     n_uniform = count_int8_gemms(sites)
     lines = [plan.describe(),
-             f"[tune] INT8 GEMMs per step: tuned={n_tuned} vs "
+             f"INT8 GEMMs per step: tuned={n_tuned} vs "
              f"uniform={n_uniform} "
              f"(saved {n_uniform - n_tuned})"]
     if not plan.sites:
-        lines.append("[tune] WARNING: no eligible GEMM sites — every "
+        lines.append("WARNING: no eligible GEMM sites — every "
                      "dot_general fell under the size/dtype gate "
                      "(per-shard shapes vs min_dim?); the plan tunes "
                      "nothing")
     if not plan.budget_met:
-        lines.append("[tune] WARNING: budget unreachable even at the "
+        lines.append("WARNING: budget unreachable even at the "
                      "split ceiling; plan uses max splits")
     return "\n".join(lines)
+
+
+def log_report(logger, report: str) -> None:
+    """Render a :func:`report_plan` string line-by-line through a
+    :class:`repro.obs.log.Logger` (WARNING lines at warning level, so
+    the rendered text matches the pre-obs ad-hoc prints exactly)."""
+    for line in report.splitlines():
+        if line.startswith("WARNING: "):
+            logger.warning(line[len("WARNING: "):])
+        else:
+            logger.info(line)
 
 
 def _parse(argv):
@@ -172,6 +186,6 @@ def main(argv: Optional[Sequence[str]] = None) -> List[str]:
     plan = solve_plan(result, budget=args.budget or None)
     path = plan.save(args.plan)
     report = report_plan(plan, cal.sites)
-    print(report)
-    print(f"[tune] plan written to {path}")
+    log_report(log, report)
+    log.info(f"plan written to {path}")
     return report.splitlines()
