@@ -114,6 +114,7 @@ def bench_gemm_throughput_model(quick: bool) -> list:
 def bench_kernel_pallas(quick: bool) -> list:
     """Pallas kernel (interpret) vs pure-jnp path, same split count."""
     from repro.core import ozaki_matmul
+    from repro.kernels.tile_model import select_tiles
 
     rng = np.random.default_rng(1)
     n = 128 if quick else 256
@@ -122,6 +123,11 @@ def bench_kernel_pallas(quick: bool) -> list:
     us_jnp = _timeit(
         jax.jit(lambda a, b: ozaki_matmul(a, b, num_splits=6)), a, b)
     rows = [f"ozaki6_jnp_{n},{us_jnp:.0f},backend=xla_cpu"]
+    # The tile shapes the v2 kernel actually runs with come from the
+    # analytic model, not a hard-coded default — report them so a
+    # model regression shows up in the row payload, not just timing.
+    d = select_tiles(n, n, n, 6, dtype="float32")
+    tiles = f"tiles={d.block_m}x{d.block_n}x{d.block_k}"
     try:
         # Pallas interpret mode has no hardware requirements but can be
         # unavailable (no pallas in the jaxlib build, Mosaic-only
@@ -133,11 +139,59 @@ def bench_kernel_pallas(quick: bool) -> list:
         pallas6 = get_backend("pallas_int8_6")
         us_pal = _timeit(lambda a, b: pallas6(a, b), a, b, reps=2)
         rows.append(f"ozaki6_pallas_interpret_{n},{us_pal:.0f},"
-                    f"backend=interpret(correctness-only)")
+                    f"backend=interpret(correctness-only);{tiles}")
     except Exception as e:  # noqa: BLE001 - degrade, don't fail
         rows.append(f"ozaki6_pallas_interpret_{n},0,"
-                    f"skipped={type(e).__name__};"
+                    f"skipped={type(e).__name__};{tiles};"
                     f"skip_reason={_skip_reason(e)}")
+    return rows
+
+
+def bench_kernel_v2(quick: bool) -> list:
+    """v2 split-GEMM data movement: modeled HBM traffic + invocations.
+
+    The v2 kernel's O(s) slice-read claim, made gateable: the analytic
+    traffic model (``repro.kernels.tile_model.traffic``) computes the
+    slice-array bytes the v1 pair-materializing kernel reads
+    (``hbm_bytes_moved_v1``, O(s^2) in the pair count) against what v2
+    reads indexing the un-materialized ``(s,m,k)``/``(s,k,n)`` stacks
+    (``hbm_bytes_moved``, O(s)), with ``hbm_read_reduction`` their
+    ratio — exactly ``(s+1)/2``, i.e. 3.5 at s=6 — and
+    ``kernel_invocations`` the pair-schedule length ``s(s+1)/2``.
+    Model deriveds are computed even when the kernel itself cannot run
+    (no Pallas in the build): compare_baseline's derived checks gate
+    the data-movement claim regardless of the timing row's skip state.
+    """
+    from repro.kernels.tile_model import select_tiles, traffic
+
+    s, n = 6, 128
+    d = select_tiles(n, n, n, s, dtype="float32")
+    t = traffic(n, n, n, s, d.block_m, d.block_n, d.block_k)
+    deriveds = (f"hbm_bytes_moved={t.slice_read_bytes_v2};"
+                f"hbm_bytes_moved_v1={t.slice_read_bytes_v1};"
+                f"hbm_read_reduction={t.read_reduction:.2f};"
+                f"kernel_invocations={d.kernel_invocations};"
+                f"pairs={d.pairs};"
+                f"tiles={d.block_m}x{d.block_n}x{d.block_k}")
+    try:
+        from repro.core import ozaki_matmul
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(5)
+        a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+
+        def v2(a, b):
+            return ops.ozaki_matmul(a, b, num_splits=s, interpret=True)
+
+        us = _timeit(v2, a, b, reps=2)
+        ref = ozaki_matmul(a, b, num_splits=s)
+        bitwise = int(bool(jnp.all(v2(a, b) == ref)))
+        rows = [f"kernel_v2_s{s}_{n},{us:.0f},"
+                f"{deriveds};bitwise_vs_jnp={bitwise}"]
+    except Exception as e:  # noqa: BLE001 - degrade, don't fail
+        rows = [f"kernel_v2_s{s}_{n},0,skipped={type(e).__name__};"
+                f"{deriveds};skip_reason={_skip_reason(e)}"]
     return rows
 
 
@@ -395,7 +449,8 @@ def bench_tuned_plan(quick: bool) -> list:
 
 
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
-           bench_kernel_pallas, bench_intercept, bench_offload_batched,
+           bench_kernel_pallas, bench_kernel_v2, bench_intercept,
+           bench_offload_batched,
            bench_offload_sharded, bench_lm_step, bench_tuned_plan,
            bench_table1_must, bench_roofline]
 

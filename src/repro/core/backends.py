@@ -148,11 +148,26 @@ class PallasBackend(OzakiBackend):
     Interpret mode is selected automatically off-TPU so the same spec
     string works everywhere.  Complex operands decompose into four real
     kernel launches (same scheme as the jnp reference path).
+
+    Block sizes come from the analytic model in
+    :mod:`repro.kernels.tile_model` — consulted per (m, k, n, s), no
+    autotuning sweep.  ``"pallas_int8*:fused"`` enables in-kernel
+    slicing (operands enter as f32 hi/lo pairs and are quantized
+    tile-by-tile in VMEM; slices never round-trip through HBM).
     """
 
-    def __init__(self, spec, policy, splits: Optional[int] = None):
+    def __init__(self, spec, policy, splits: Optional[int] = None,
+                 fused: bool = False):
         super().__init__(spec, policy, splits)
         self.interpret = jax.default_backend() != "tpu"
+        self.fused = fused
+
+    def tile_decision(self, m, k, n, num_splits, dtype=None):
+        """The model's block/schedule pick for one (m, k, n, s) site."""
+        from repro.kernels import tile_model  # no Pallas dependency
+
+        return tile_model.select_tiles(m, k, n, num_splits, dtype=dtype,
+                                       fused=self.fused)
 
     def matmul(self, a, b, *, out_dtype=None, num_splits=None,
                site: str = "default"):
@@ -166,10 +181,14 @@ class PallasBackend(OzakiBackend):
         out_dtype = jnp.dtype(out_dtype)
 
         def kernel(x, y, real_out):
+            tiles = self.tile_decision(x.shape[0], x.shape[1],
+                                       y.shape[1], s, dtype=real_out)
             return ops.ozaki_matmul(x, y, num_splits=s,
                                     out_dtype=real_out,
                                     slice_bits=self.policy.slice_bits,
-                                    interpret=self.interpret)
+                                    interpret=self.interpret,
+                                    fuse_slicing=self.fused,
+                                    tiles=tiles)
 
         # Same complex gate as the jnp reference path (inputs OR output
         # complex), same shared four-real-GEMM decomposition.
@@ -243,7 +262,7 @@ def example_specs() -> List[str]:
     Used by the registry round-trip tests and the README grammar table.
     """
     return ["dgemm", "fp64_int8", "fp64_int8_6", "pallas_int8_6",
-            "adaptive:1e-9"]
+            "pallas_int8_6:fused", "adaptive:1e-9"]
 
 
 def get_backend(spec: str,
@@ -286,9 +305,10 @@ def _ozaki_factory(spec, policy, splits, arg):
 
 
 def _pallas_factory(spec, policy, splits, arg):
-    if arg is not None:
-        raise ValueError(f"'pallas_int8' takes no ':<arg>', got {spec!r}")
-    return PallasBackend(spec, policy, splits)
+    if arg not in (None, "fused"):
+        raise ValueError(f"'pallas_int8' accepts only ':fused' as an "
+                         f"argument, got {spec!r}")
+    return PallasBackend(spec, policy, splits, fused=arg == "fused")
 
 
 def _adaptive_factory(spec, policy, splits, arg):

@@ -142,15 +142,18 @@ class Site:
     ``scan`` lengths multiplied out), the enclosing SPMD axes
     ``spmd_axes`` (``(name, size)`` pairs of the ``shard_map``/``pmap``
     meshes the site runs under), the resolved per-site ``backend``
-    spec, and ``eligible`` — whether the site passed the dtype and
-    size gates (a plan-demoted site is eligible but not offloaded).
+    spec, ``eligible`` — whether the site passed the dtype and size
+    gates (a plan-demoted site is eligible but not offloaded) — and,
+    for Pallas-family backends, ``tiles``: the analytic tile model's
+    block/schedule pick for this site's geometry
+    (:meth:`repro.kernels.tile_model.TileDecision.summary`).
     """
 
     def __init__(self, name: str, lhs_shape, rhs_shape, dtype,
                  offloaded: bool, splits: int, reason: str, *,
                  m: int = 0, k: int = 0, n: int = 0, batch: int = 1,
                  mult: int = 1, spmd_axes=(), backend: str = "",
-                 eligible: bool = False):
+                 eligible: bool = False, tiles: dict | None = None):
         self.name = name
         self.lhs_shape = tuple(lhs_shape)
         self.rhs_shape = tuple(rhs_shape)
@@ -163,6 +166,7 @@ class Site:
         self.spmd_axes = tuple(spmd_axes)
         self.backend = backend
         self.eligible = eligible
+        self.tiles = dict(tiles) if tiles else None
 
     @property
     def flops(self) -> int:
@@ -181,6 +185,9 @@ class Site:
     def __repr__(self):
         action = (f"offload splits={self.splits}" if self.offloaded
                   else f"native ({self.reason})")
+        if self.tiles:
+            action += (f" tiles={self.tiles['block_m']}x"
+                       f"{self.tiles['block_n']}x{self.tiles['block_k']}")
         return (f"{self.name}: {self.lhs_shape} @ {self.rhs_shape} "
                 f"{self.dtype.name} -> {action}")
 
@@ -300,9 +307,28 @@ def _classify(eqn, policy: PrecisionPolicy, name: str, mult: int = 1,
         # it is *eligible*, and counts toward plan fingerprints — but
         # executes native.
         return skip("demoted to dgemm", eligible=True, backend=backend)
+    splits = policy.splits_for(name)
     return Site(name, lhs_aval.shape, rhs_aval.shape, dtype,
-                True, policy.splits_for(name), "", eligible=True,
-                backend=backend, **geom)
+                True, splits, "", eligible=True, backend=backend,
+                tiles=_tile_choice(backend, m, k, n, splits, dtype),
+                **geom)
+
+
+def _tile_choice(backend_spec: str, m, k, n, splits, dtype):
+    """Analytic tile pick for Pallas-family sites (None otherwise).
+
+    The model itself never imports Pallas, so the decision is available
+    (in reports, plans, obs events) even on hosts that cannot run the
+    kernel.
+    """
+    if not backend_spec.startswith("pallas_int8"):
+        return None
+    from repro.kernels import tile_model  # deferred: core stays light
+
+    decision = tile_model.select_tiles(
+        m, k, n, splits, dtype=dtype,
+        fused=backend_spec.endswith(":fused"))
+    return decision.summary()
 
 
 class _DotDims:
@@ -485,6 +511,7 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
             "batch": site.batch, "mult": site.mult,
             "spmd_axes": [list(ax) for ax in site.spmd_axes],
             "flops": site.flops,
+            "tiles": dict(site.tiles) if site.tiles else None,
         }
         jax.debug.callback(
             lambda _p=payload: on_site_event(dict(_p)))

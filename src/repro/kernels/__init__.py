@@ -1,5 +1,20 @@
-"""repro.kernels — Pallas kernels for the emulation engine."""
+"""repro.kernels — Pallas kernels, slicing primitives, tile model.
 
-from . import ops
+``tile_model`` and ``slicing`` are plain jnp/numpy and import eagerly;
+``ops`` (the Pallas kernels) loads lazily so hosts without
+``jax.experimental.pallas`` can still consult the analytic tile model
+(the tuner and the offload interceptor do).
+"""
 
-__all__ = ["ops"]
+from . import slicing, tile_model
+
+__all__ = ["ops", "slicing", "tile_model"]
+
+
+def __getattr__(name):
+    if name == "ops":
+        import importlib
+        module = importlib.import_module(".ops", __name__)
+        globals()["ops"] = module
+        return module
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,116 @@
+"""In-kernel slicing primitives shared by the fused kernel and jnp.
+
+The v2 fused path quantizes operands to int8 slices *inside* the
+Pallas kernel, tile by tile in VMEM, so slices never round-trip
+through HBM.  TPU HBM carries no f64, so a high-precision operand
+enters the kernel as an exact pair of f32 halves ``(hi, lo)`` with
+``hi + lo == r`` (for f32 inputs ``lo == 0`` and every step below
+reproduces :func:`repro.core.ozaki.slice_matrix` bit-for-bit; for f64
+inputs the pair carries ~48 mantissa bits — the same budget the df32
+accumulator keeps).
+
+Everything here is plain jnp: the Pallas kernel body calls these
+helpers on VMEM tiles, and :func:`slice_matrix_fused` runs the exact
+same arithmetic as a whole-matrix jnp program so interpret-mode tests
+can pin the kernel bit-for-bit against a reference that never touches
+Pallas.  Only :mod:`repro.kernels.ops` imports Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ozaki import SLICE_BITS, _pow2_scale, _two_sum
+
+__all__ = [
+    "to_f32_pair",
+    "to_operand_pair",
+    "slice_step",
+    "quantize_tile",
+    "slice_matrix_fused",
+]
+
+
+def to_f32_pair(r):
+    """Exact f32 decomposition ``r == hi + lo`` (lo == 0 for f32 ``r``).
+
+    ``hi`` is ``r`` rounded to f32; ``lo`` is the remainder, itself
+    representable in f32 because the cancellation in ``r - hi`` leaves
+    at most a mantissa's worth of trailing bits.
+    """
+    hi = r.astype(jnp.float32)
+    lo = (r - hi.astype(r.dtype)).astype(jnp.float32)
+    return hi, lo
+
+
+def to_operand_pair(x, axis: int):
+    """Scale ``x`` by its power-of-two sigma and decompose to f32 halves.
+
+    The shared preamble of the fused kernel wrapper and of
+    :func:`slice_matrix_fused` — one definition so the kernel and its
+    jnp reference cannot drift.  Returns ``(hi, lo, sigma)`` with
+    ``sigma`` squeezed like :func:`repro.core.ozaki.slice_matrix`'s.
+    """
+    compute_dtype = (jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+    x = x.astype(compute_dtype)
+    sigma = _pow2_scale(x, axis=axis)
+    hi, lo = to_f32_pair(x / sigma)
+    return hi, lo, jnp.squeeze(sigma, axis=axis)
+
+
+def slice_step(hi, lo, radix: float):
+    """One slicing step on an f32 pair: extract q, return the residue.
+
+    Mirrors the reference recurrence ``q = round(r*radix); r = r*radix
+    - q`` in pair arithmetic.  Every operation is exact: ``radix`` is a
+    power of two, ``yh - q`` cancels only leading bits (|yh + yl| <=
+    radix/2 + 1 so q is a small integer), and TwoSum re-normalizes the
+    residue pair.  The invariant ``hi + lo == r_exact`` therefore holds
+    through every step, which is what makes the fused kernel's slices
+    equal to :func:`slice_matrix_fused`'s bit-for-bit.
+    """
+    yh = hi * radix
+    yl = lo * radix
+    q = jnp.round(yh + yl)
+    r = yh - q
+    hi2, lo2 = _two_sum(r, yl)
+    return q, hi2, lo2
+
+
+def quantize_tile(hi, lo, index, num_splits: int,
+                  slice_bits: int = SLICE_BITS):
+    """Quantize an f32-pair tile and return slice ``index`` as int8.
+
+    ``index`` may be a traced scalar (the kernel reads it from the
+    scalar-prefetch pair schedule).  The loop length is static
+    (``num_splits``), so this lowers to a fixed chain of exact ops plus
+    ``num_splits`` selects — no gather, no HBM.
+    """
+    radix = float(2 ** slice_bits)
+    sel = jnp.zeros(hi.shape, jnp.int8)
+    for t in range(num_splits):
+        q, hi, lo = slice_step(hi, lo, radix)
+        sel = jnp.where(t == index, q.astype(jnp.int8), sel)
+    return sel
+
+
+def slice_matrix_fused(x, num_splits: int, axis: int,
+                       slice_bits: int = SLICE_BITS):
+    """Whole-matrix jnp reference for the fused kernel's slicing.
+
+    Same contract as :func:`repro.core.ozaki.slice_matrix` — returns
+    ``(slices, sigma)`` — but computed through the f32-pair recurrence
+    the kernel runs in VMEM.  For f32 inputs the two agree bit-for-bit
+    (``lo == 0`` makes every pair step collapse to the reference
+    recurrence); for f64 inputs this *is* the spec the kernel is tested
+    against, truncated to the pair's ~48 mantissa bits.
+    """
+    hi, lo, sigma = to_operand_pair(x, axis)
+    radix = float(2 ** slice_bits)
+    out = []
+    for _ in range(num_splits):
+        q, hi, lo = slice_step(hi, lo, radix)
+        out.append(q.astype(jnp.int8))
+    return jnp.stack(out), sigma

@@ -181,6 +181,7 @@ def _run_tune(args, train_step, params, opt_state, data, start,
     """``--tune N --plan path``: calibrate, solve, save, report."""
     from repro.tune import Calibrator, solve_plan
     from repro.tune.cli import log_report, report_plan, tune_policy
+    from repro.tune.plan import write_tiles_table
 
     policy = tune_policy(args.backend or "fp64_int8", args.min_dim)
     log.info(f"tuning: {args.tune} calibration batch(es) from "
@@ -194,8 +195,10 @@ def _run_tune(args, train_step, params, opt_state, data, start,
         cal.run(params, opt_state, batch)
     plan = solve_plan(cal.result(), budget=args.budget or None)
     path = plan.save(args.plan)
+    tiles_path = write_tiles_table(plan, path)
     log_report(get_logger("tune"), report_plan(plan, cal.sites))
-    log.info(f"plan written to {path}; train with --plan {path}")
+    log.info(f"plan written to {path} (tile decisions: "
+             f"{tiles_path}); train with --plan {path}")
 
 
 def _check_resume_plan(ckpt_dir, start: int, plan,

@@ -151,7 +151,8 @@ class MetricsRun:
                 rhs_shape=list(s.rhs_shape), dtype=s.dtype.name,
                 m=s.m, k=s.k, n=s.n, batch=s.batch, mult=s.mult,
                 spmd_axes=list(s.spmd_axes), flops=s.flops,
-                reason=s.reason)
+                reason=s.reason,
+                tiles=dict(s.tiles) if getattr(s, "tiles", None) else None)
 
     def site_event_handler(self):
         """The ``on_site_event`` callable for :func:`repro.core.offload`.

@@ -81,6 +81,10 @@ class SiteRecord:
     rhs_exp: Optional[int] = None   #: ceil(log2(max|B|))
     measured_rel: Optional[float] = None  #: probe error, 2 sig. digits
     calls: int = 0       #: host callback invocations (diagnostic only)
+    #: canonical (k-only) tile-model pick at the probe split count for
+    #: Pallas-family policies, ``(block_m, block_n, block_k)``;
+    #: diagnostic — the solver re-derives tiles at the *solved* count.
+    tiles: Optional[Tuple[int, int, int]] = None
 
 
 class _Recorder:
@@ -212,9 +216,11 @@ class CalibrationResult:
         for r in sorted(self.records, key=lambda r: r.site):
             err = ("unmeasured" if r.measured_rel is None
                    else f"err~{r.measured_rel:.1e}")
+            tiles = (" tiles={}x{}x{}".format(*r.tiles)
+                     if r.tiles else "")
             lines.append(
                 f"  {r.site}: k={r.k} {r.dtype} flops={r.flops:.3g} "
-                f"exp=({r.lhs_exp},{r.rhs_exp}) {err}")
+                f"exp=({r.lhs_exp},{r.rhs_exp}) {err}{tiles}")
         return "\n".join(lines)
 
 
@@ -281,6 +287,18 @@ class Calibrator:
         """
         return self._sites
 
+    def _probe_tiles(self, k: int, dtype: str):
+        """Canonical tile pick at the probe split count (Pallas only)."""
+        spec = self.policy.backend
+        if not spec.startswith("pallas_int8"):
+            return None
+        from repro.kernels import tile_model  # no Pallas dependency
+
+        d = tile_model.select_tiles(None, k, None, self.probe_splits,
+                                    dtype=dtype,
+                                    fused=spec.endswith(":fused"))
+        return (d.block_m, d.block_n, d.block_k)
+
     def result(self) -> CalibrationResult:
         """Aggregate the recorded statistics into solver inputs.
 
@@ -303,7 +321,8 @@ class Calibrator:
             if rec is None:
                 rec = by_canon[canon] = SiteRecord(
                     site=canon, k=site.k, dtype=site.dtype.name,
-                    flops=0, probe_splits=self.probe_splits)
+                    flops=0, probe_splits=self.probe_splits,
+                    tiles=self._probe_tiles(site.k, site.dtype.name))
             elif (rec.k, rec.dtype) != (site.k, site.dtype.name):
                 raise ValueError(
                     f"sites {site.name!r} and an earlier one share "

@@ -34,6 +34,7 @@ from repro.shard import data_parallel_setup
 from repro.train import AdamW, SyntheticText
 
 from .calibrate import Calibrator
+from .plan import write_tiles_table
 from .solve import count_int8_gemms, solve_plan, unpinned_family
 
 __all__ = ["main", "tune_policy", "report_plan", "log_report"]
@@ -185,7 +186,9 @@ def main(argv: Optional[Sequence[str]] = None) -> List[str]:
     result = cal.result()
     plan = solve_plan(result, budget=args.budget or None)
     path = plan.save(args.plan)
+    tiles_path = write_tiles_table(plan, path)
     report = report_plan(plan, cal.sites)
     log_report(log, report)
-    log.info(f"plan written to {path}")
+    log.info(f"plan written to {path} "
+             f"(tile decisions: {tiles_path})")
     return report.splitlines()

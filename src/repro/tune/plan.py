@@ -47,6 +47,8 @@ __all__ = [
     "PlanSite",
     "PrecisionPlan",
     "site_set_fingerprint",
+    "tiles_table",
+    "write_tiles_table",
 ]
 
 #: Schema version of the JSON artifact; bump on breaking layout change.
@@ -92,6 +94,15 @@ class PlanSite:
     (``ceil(log2(max|X|))``, pmax-shared across the mesh in sharded
     calibration runs).  ``backend == "dgemm"`` demotes the site to
     native execution.
+
+    ``tiles`` is the analytic tile model's *canonical* block pick
+    ``(block_m, block_n, block_k)`` for Pallas-family sites (``None``
+    otherwise, and in plans written before the model existed).
+    Canonical means derived from ``(k, dtype, splits)`` only — never
+    from per-shard free extents — so a plan solved under a ``dp=N``
+    mesh stays byte-identical to a single-device one.  The runtime
+    backend re-derives the final blocks from the site's true geometry;
+    the plan records the decision for reports and regression tracking.
     """
 
     site: str
@@ -102,9 +113,14 @@ class PlanSite:
     rhs_exp: int
     splits: int
     backend: str
+    tiles: Tuple[int, int, int] | None = None
 
     #: ``site_set_fingerprint`` treats every PlanSite as eligible.
     eligible = True
+
+    def __post_init__(self):
+        if self.tiles is not None:
+            object.__setattr__(self, "tiles", tuple(self.tiles))
 
 
 @dataclasses.dataclass
@@ -143,6 +159,8 @@ class PrecisionPlan:
         for s in self.sites:
             action = ("dgemm (demoted)" if s.backend == "dgemm"
                       else f"s={s.splits}")
+            if s.tiles:
+                action += " tiles={}x{}x{}".format(*s.tiles)
             lines.append(f"  {s.site}: k={s.k} {s.dtype} "
                          f"flops={s.flops:.3g} -> {action}")
         return "\n".join(lines)
@@ -239,3 +257,49 @@ class PrecisionPlan:
         if not path.exists():
             raise PlanError(f"no precision plan at {path}")
         return cls.from_json(path.read_text())
+
+
+def tiles_table(plan: PrecisionPlan) -> dict:
+    """Tile-model decision table for a plan's Pallas-family sites.
+
+    One row per site that carries a tile pick, with the analytic
+    figures behind the decision (VMEM footprint, MXU issue cycles and
+    HBM bytes per grid step, pair-schedule length) recomputed from the
+    same canonical inputs the solver used — so the artifact CI uploads
+    next to the plan JSON makes tile-selection regressions reviewable,
+    not just split counts.  Deterministic like the plan itself.
+    """
+    from repro.kernels import tile_model  # no Pallas dependency
+
+    rows = []
+    for s in plan.sites:
+        if not s.tiles or s.splits < 1:
+            continue
+        fused = s.backend.endswith(":fused")
+        d = tile_model.select_tiles(None, s.k, None, s.splits,
+                                    dtype=s.dtype, fused=fused)
+        rows.append({
+            "site": s.site, "k": s.k, "dtype": s.dtype,
+            "backend": s.backend, "splits": s.splits,
+            "tiles": list(s.tiles), "pairs": d.pairs,
+            "schedule": d.schedule, "fused": fused,
+            "vmem_bytes": d.vmem_bytes,
+            "mxu_cycles_step": d.mxu_cycles_step,
+            "hbm_bytes_step": d.hbm_bytes_step,
+        })
+    return {"fingerprint": plan.fingerprint, "backend": plan.backend,
+            "sites": rows}
+
+
+def write_tiles_table(plan: PrecisionPlan, plan_path) -> Path:
+    """Write the tile-decision table next to the plan JSON.
+
+    ``runs/plans/tiny.json`` gets ``runs/plans/tiny.tiles.json`` — the
+    sibling artifact the CI workflow uploads with the plan.
+    """
+    path = Path(plan_path)
+    path = path.with_name(path.stem + ".tiles.json")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(tiles_table(plan), indent=2,
+                               sort_keys=True) + "\n")
+    return path

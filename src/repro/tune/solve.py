@@ -3,11 +3,15 @@
 The solver turns a :class:`~repro.tune.calibrate.CalibrationResult`
 into a :class:`~repro.tune.plan.PrecisionPlan`: given an end-to-end
 relative-error budget, assign each site the split count that minimizes
-the INT8 GEMM cost
+the modeled emulation cost
 
-    cost(s_i) = n_pairs(s_i) * flops_i        (n_pairs = s(s+1)/2)
+    cost(s_i) = split_cost(s_i) * flops_i
 
-subject to the composed (first-order additive) error bound
+where ``split_cost`` is the analytic kernel model's pair-schedule cost
+(:func:`repro.kernels.tile_model.split_cost` — the s(s+1)/2 INT8
+pair-GEMMs of the schedule plus the O(s) slice-array traffic each
+extra split streams, in pair-GEMM units), subject to the composed
+(first-order additive) error bound
 
     sum_i  err_i(s_i)  <=  budget.
 
@@ -30,9 +34,13 @@ The assignment itself is greedy marginal analysis — repeatedly grant
 one extra split to the site with the best error-reduction per unit
 cost — which is near-optimal here because each split cuts a site's
 error by the huge constant ``2**slice_bits`` while cost grows only
-linearly in ``s``.  Ties break on the site name, so the solve is
-deterministic given identical inputs (the dp=8 == single-device
-byte-identity relies on this).
+linearly in ``s``.  Ties break on the site name, and the cost model
+uses only dp-invariant inputs (``flops`` is shard-summed,
+``split_cost`` depends on ``s`` alone), so the solve is deterministic
+given identical inputs (the dp=8 == single-device byte-identity relies
+on this).  For Pallas-family plans each solved site also records the
+tile model's canonical block pick — again from ``(k, dtype, splits)``
+only, never per-shard geometry.
 """
 
 from __future__ import annotations
@@ -46,6 +54,7 @@ from repro.core.backends import _SPLITS_RE
 from repro.core.intercept import Site
 from repro.core.ozaki import num_pair_gemms
 from repro.core.precision import MAX_SPLITS, estimate_rel_error
+from repro.kernels.tile_model import select_tiles, split_cost
 
 from .calibrate import CalibrationResult, SiteRecord
 from .plan import PlanSite, PrecisionPlan
@@ -66,6 +75,21 @@ def unpinned_family(spec: str) -> str:
     if m:
         head = m.group("family")
     return head + (sep + arg if sep else "")
+
+
+def _plan_tiles(family: str, k: int, dtype: str, splits: int):
+    """Canonical tile pick recorded in a PlanSite (Pallas families only).
+
+    Derived from ``(k, dtype, splits)`` alone — free extents are
+    per-shard and would break the dp=N == single-device plan
+    byte-identity.  The runtime backend re-selects with the true
+    geometry; this is the reviewable record of the decision.
+    """
+    if not family.startswith("pallas_int8"):
+        return None
+    d = select_tiles(None, k, None, splits, dtype=dtype,
+                     fused=family.endswith(":fused"))
+    return (d.block_m, d.block_n, d.block_k)
 
 
 def default_budget(records: Iterable[SiteRecord],
@@ -155,7 +179,10 @@ def solve_plan(result: CalibrationResult, *,
             if s >= max_splits:
                 continue
             drop = errs[name] - _site_err(rec, s + 1, slice_bits)
-            cost = (num_pair_gemms(s + 1) - num_pair_gemms(s)) \
+            # Marginal cost from the kernel model's pair-schedule
+            # curve, not the bare n_pairs(s) proxy: the extra pair
+            # GEMMs of s+1 plus the extra slice layer it streams.
+            cost = (split_cost(s + 1) - split_cost(s)) \
                 * max(rec.flops, 1)
             gain = drop / cost
             if gain > best_gain:
@@ -173,7 +200,8 @@ def solve_plan(result: CalibrationResult, *,
         sites.append(PlanSite(
             site=name, k=rec.k, dtype=rec.dtype, flops=rec.flops,
             lhs_exp=rec.lhs_exp or 0, rhs_exp=rec.rhs_exp or 0,
-            splits=splits[name], backend=family))
+            splits=splits[name], backend=family,
+            tiles=_plan_tiles(family, rec.k, rec.dtype, splits[name])))
     for name, rec in demoted.items():
         sites.append(PlanSite(
             site=name, k=rec.k, dtype=rec.dtype, flops=rec.flops,

@@ -55,6 +55,22 @@ class TestSiteReport:
         sites = site_report(_solver, pol)(a, b)
         assert [s.splits for s in sites] == [4, 9, 4]
 
+    def test_pallas_sites_carry_tile_choice(self, operands):
+        # Pallas-family sites record the analytic tile model's block
+        # pick (and show it in repr); jnp-family sites record None.
+        a, b = operands
+        pol = PrecisionPolicy(backend="pallas_int8", default_splits=4,
+                              min_dim=64)
+        sites = site_report(_solver, pol)(a, b)
+        for s in sites:
+            assert set(s.tiles) == {"block_m", "block_n", "block_k",
+                                    "pairs", "schedule"}
+            assert s.tiles["schedule"] == "ordered"
+            assert "tiles=" in repr(s)
+        jnp_sites = site_report(_solver,
+                                PrecisionPolicy(min_dim=64))(a, b)
+        assert all(s.tiles is None for s in jnp_sites)
+
 
 class TestOffloadNumerics:
     def test_agrees_with_native(self, operands):

@@ -166,6 +166,30 @@ class TestEvents:
         events = read_events(path)
         assert len(events) == 1 and events[0]["loss"] == 2.0
 
+    def test_site_decl_carries_tile_choice(self, tmp_path):
+        # Pallas-family sites declare the analytic tile model's pick;
+        # jnp-family sites declare tiles=None.
+        def f(a, b):
+            return jnp.sum(a @ b)
+
+        a = jnp.ones((128, 128), jnp.float32)
+        for backend, has_tiles in (("pallas_int8", True),
+                                   ("fp64_int8", False)):
+            pol = PrecisionPolicy(backend=backend, default_splits=4,
+                                  min_dim=64)
+            sites = site_report(f, pol)(a, a)
+            with MetricsRun(tmp_path / backend) as run:
+                run.declare_sites(sites)
+            events = load_runs(tmp_path / backend)[run.run_id]
+            (decl,) = [e for e in events if e["type"] == "site_decl"]
+            if has_tiles:
+                assert set(decl["tiles"]) == {"block_m", "block_n",
+                                              "block_k", "pairs",
+                                              "schedule"}
+                assert decl["tiles"]["schedule"] == "ordered"
+            else:
+                assert decl["tiles"] is None
+
 
 class TestOnSiteEvent:
     """The intercept hook: offload(..., on_site_event=...)."""

@@ -290,6 +290,81 @@ class TestPlanArtifact:
         assert pol.min_dim == plan.min_dim
 
 
+class TestPlanTiles:
+    """The tile model's canonical block picks in the plan artifact."""
+
+    def _pallas_plan(self):
+        recs = [_record("dot0", k=256, dtype="float32"),
+                _record("dot1", k=512, dtype="float32",
+                        measured=1e-1, probe=6)]  # demoted
+        pol = PrecisionPolicy(backend="pallas_int8")
+        return solve_plan(_result(recs, policy=pol), budget=1e-6)
+
+    def test_pallas_plan_records_canonical_tiles(self):
+        from repro.kernels.tile_model import select_tiles
+
+        plan = self._pallas_plan()
+        by_name = {s.site: s for s in plan.sites}
+        solved = by_name["dot0"]
+        d = select_tiles(None, solved.k, None, solved.splits,
+                         dtype=solved.dtype)
+        assert solved.tiles == (d.block_m, d.block_n, d.block_k)
+        assert "tiles=" in plan.describe()
+        # Demoted sites run native: no tile pick.
+        assert by_name["dot1"].tiles is None
+
+    def test_jnp_plan_has_no_tiles(self):
+        plan = solve_plan(_result([_record("dot0")]), budget=1e-9)
+        assert all(s.tiles is None for s in plan.sites)
+
+    def test_tiles_survive_roundtrip_byte_identical(self, tmp_path):
+        plan = self._pallas_plan()
+        path = plan.save(tmp_path / "p.json")
+        loaded = PrecisionPlan.load(path)
+        assert loaded.to_json() == plan.to_json()
+        assert {s.site: s.tiles for s in loaded.sites} == \
+            {s.site: s.tiles for s in plan.sites}
+
+    def test_plan_without_tiles_field_still_loads(self):
+        # Plans written before the tile model existed: additive field,
+        # same PLAN_VERSION, default None.
+        import json as _json
+
+        doc = _json.loads(self._pallas_plan().to_json())
+        for s in doc["sites"]:
+            s.pop("tiles")
+        plan = PrecisionPlan.from_json(_json.dumps(doc))
+        assert all(s.tiles is None for s in plan.sites)
+
+    def test_tiles_table_written_next_to_plan(self, tmp_path):
+        from repro.tune.plan import tiles_table, write_tiles_table
+
+        plan = self._pallas_plan()
+        path = plan.save(tmp_path / "p.json")
+        tpath = write_tiles_table(plan, path)
+        assert tpath == tmp_path / "p.tiles.json"
+        doc = tiles_table(plan)
+        assert doc["fingerprint"] == plan.fingerprint
+        (row,) = doc["sites"]  # demoted dot1 carries no tiles row
+        assert row["site"] == "dot0"
+        assert set(row) >= {"tiles", "pairs", "schedule", "vmem_bytes",
+                            "mxu_cycles_step", "hbm_bytes_step"}
+        import json as _json
+
+        assert _json.loads(tpath.read_text()) == _json.loads(
+            _json.dumps(doc, sort_keys=True))
+
+    def test_calibrator_probes_tiles_for_pallas_backend(self):
+        a, b = _operands(192)
+        pol = PrecisionPolicy(backend="pallas_int8", default_splits=4,
+                              min_dim=64)
+        cal = Calibrator(_two_site_fn, pol)
+        cal.run(a, b)
+        result = cal.result()
+        assert all(r.tiles is not None for r in result.records)
+        assert "tiles=" in result.describe()
+
+
 class TestUnmatchedSiteOverrides:
     def _run(self, pol):
         a, b = _operands(192)
