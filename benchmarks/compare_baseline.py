@@ -123,7 +123,11 @@ def evaluate(rows: dict, baseline: dict, derived: dict | None = None):
             failures.append(f"gate {metric}/{ref}: reference is 0")
             continue
         ratio = rows[metric] / rows[ref]
-        limit = gate["max_ratio"] * (1.0 + tol)
+        # A gate may carry its own tolerance (noisy comparisons like
+        # overlapped-vs-blocking step time on a 1-core runner need a
+        # wider band than the 25% offload-slowdown bound).
+        gate_tol = float(gate.get("tolerance", tol))
+        limit = gate["max_ratio"] * (1.0 + gate_tol)
         line = (f"{metric}/{ref}: ratio {ratio:.2f} "
                 f"(baseline {gate['max_ratio']:.2f}, limit {limit:.2f})")
         if ratio > limit:

@@ -305,6 +305,61 @@ def bench_offload_sharded(quick: bool) -> list:
     ]
 
 
+def bench_train_2d(quick: bool) -> list:
+    """2-D (dp x tp) train step: overlapped vs blocking grad reduce.
+
+    The same sharded train step twice over the largest canonical
+    ``dp=N,tp=M`` mesh the visible devices allow (tp=2 when the tiny
+    config's head counts divide and >= 2 devices are up, dp = the
+    rest): once with the default bucketed all-reduce that XLA can
+    overlap with backward GEMMs, once with the ``optimization_barrier``
+    reference that forces every gradient to exist before one full-tree
+    psum.  The gate ratios overlapped/blocking — overlap must never
+    make the step *slower*.  The derived column records the bucket
+    count and bytes per psum so a bucketing regression (everything
+    collapsing into one bucket, or per-leaf fragmentation) fails the
+    gate even when the timing noise hides it.
+    """
+    from repro.configs import get_config
+    from repro.launch.train import build_sharded_train_step
+    from repro.models import Model
+    from repro.shard import bucket_stats, train_mesh_setup
+    from repro.train import AdamW, SyntheticText
+
+    cfg = get_config("tiny")
+    ndev = jax.device_count()
+    tp = 2 if ndev % 2 == 0 else 1
+    dp = max(ndev // tp, 1)
+    batch = max(4, dp)
+    model, opt = Model(cfg), AdamW(lr=3e-3)
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    mesh, bsh, (params, state), _ = train_mesh_setup(
+        f"dp={dp},tp={tp}", batch, cfg, (params, state))
+    data = jax.device_put(
+        jnp.asarray(SyntheticText(cfg.vocab_size, 64, batch,
+                                  seed=0).batch(0)), bsh)
+
+    # A small bucket so even the tiny tree splits into several psums —
+    # the quick bench must exercise the multi-bucket path, not degrade
+    # to one all-encompassing psum.
+    bucket_bytes = 256 << 10
+    n_buckets, sizes = bucket_stats(params, bucket_bytes)
+    bpp = int(sum(sizes) / max(n_buckets, 1))
+
+    rows = []
+    for mode in ("bucketed", "blocking"):
+        step = jax.jit(build_sharded_train_step(
+            model, opt, mesh, grad_reduce=mode,
+            bucket_bytes=bucket_bytes))
+        us = _timeit(step, params, state, data, reps=3)
+        tag = "overlapped" if mode == "bucketed" else mode
+        rows.append(
+            f"train_2d_{tag},{us:.0f},devices={ndev};dp={dp};tp={tp};"
+            f"n_buckets={n_buckets};bytes_per_psum={bpp}")
+    return rows
+
+
 def bench_roofline(quick: bool) -> list:
     """§Roofline summary from the dry-run artifacts (if present)."""
     try:
@@ -451,7 +506,8 @@ def bench_tuned_plan(quick: bool) -> list:
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
            bench_kernel_pallas, bench_kernel_v2, bench_intercept,
            bench_offload_batched,
-           bench_offload_sharded, bench_lm_step, bench_tuned_plan,
+           bench_offload_sharded, bench_train_2d,
+           bench_lm_step, bench_tuned_plan,
            bench_table1_must, bench_roofline]
 
 

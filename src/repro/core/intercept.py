@@ -182,14 +182,21 @@ class Site:
         return (2 * max(self.batch, 1) * self.m * self.k * self.n
                 * self.mult * spmd * cplx)
 
+    @property
+    def spmd(self) -> str:
+        """Mesh context, e.g. ``"dp=4,tp=2"`` (empty off-mesh)."""
+        return ",".join(f"{name}={size}"
+                        for name, size in self.spmd_axes)
+
     def __repr__(self):
         action = (f"offload splits={self.splits}" if self.offloaded
                   else f"native ({self.reason})")
         if self.tiles:
             action += (f" tiles={self.tiles['block_m']}x"
                        f"{self.tiles['block_n']}x{self.tiles['block_k']}")
-        return (f"{self.name}: {self.lhs_shape} @ {self.rhs_shape} "
-                f"{self.dtype.name} -> {action}")
+        mesh = f" [{self.spmd}]" if self.spmd_axes else ""
+        return (f"{self.name}{mesh}: {self.lhs_shape} @ "
+                f"{self.rhs_shape} {self.dtype.name} -> {action}")
 
 
 def _subjaxprs(eqn):
@@ -597,13 +604,15 @@ def transform_jaxpr(closed, policy: PrecisionPolicy,
             elif prim == "psum2":
                 # Same story for psum2 (the rewritten psum): replay it
                 # as the plain collective so values AND cotangents come
-                # out right under the check_rep=False rebuild.
-                outvals = [
-                    jax.lax.psum(
-                        x, tuple(eqn.params["axes"]),
-                        axis_index_groups=eqn.params.get(
-                            "axis_index_groups"))
-                    for x in invals]
+                # out right under the check_rep=False rebuild.  One
+                # bind over *all* operands: a bucketed gradient
+                # all-reduce stages one multi-operand psum per bucket,
+                # and replaying it per operand would silently de-fuse
+                # the buckets the overlap path exists to create.
+                outvals = list(jax.lax.psum(
+                    tuple(invals), tuple(eqn.params["axes"]),
+                    axis_index_groups=eqn.params.get(
+                        "axis_index_groups")))
             elif prim == "scan":
                 pfx = f"{prefix}scan{flow_counter[0]}/"
                 flow_counter[0] += 1

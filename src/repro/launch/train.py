@@ -17,10 +17,18 @@ cutoff.  The discovered sites are printed once per run.
 
 ``--mesh dp=N`` runs the same step data-parallel over N devices
 (:func:`build_sharded_train_step`): parameters replicated, batch split
-over the ``dp`` axis, gradients ``pmean``-ed — and it composes with
+over the ``dp`` axis, gradients mean-reduced with a *bucketed* psum
+(grouped by byte size, issued as buckets complete so XLA overlaps
+them with the remaining backward GEMMs; ``--grad-reduce`` selects the
+blocking reference or a ``ppermute`` ring instead).  ``--mesh
+dp=N,tp=M`` adds Megatron-style tensor parallelism: attention heads
+and the SwiGLU hidden dim split over ``tp`` per the axis rules in
+:mod:`repro.shard.rules`, each sublayer closed by a ``psum`` on the
+``tp`` axis inside the shard_map body, and checkpoints written as
+per-shard npz files plus a layout manifest.  Both compose with
 ``--backend``, whose offload transform descends into the ``shard_map``
-body (sites named ``shmap0/...``), so every shard runs the identical
-per-shard Ozaki split schedule.  On CPU, export
+body (sites named ``shmap0/...``), so every shard runs the per-shard
+Ozaki split schedule its local extents call for.  On CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
 Precision plans (:mod:`repro.tune`) close the loop:
@@ -54,7 +62,8 @@ from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend, offload
 from repro.models import Model
 from repro.obs import MetricsRun, NumericsMonitor, get_logger
-from repro.shard import data_parallel_setup
+from repro.shard import (DEFAULT_BUCKET_BYTES, bucket_stats,
+                         reduce_gradients, train_mesh_setup)
 from repro.train import AdamW, SyntheticText, checkpoint
 from repro.tune.solve import count_int8_gemms
 
@@ -78,37 +87,71 @@ def build_train_step(model: Model, opt: AdamW):
 
 
 def build_sharded_train_step(model: Model, opt: AdamW, mesh,
-                             axis: str | None = None):
-    """Data-parallel version of :func:`build_train_step` over ``mesh``.
+                             axis: str | None = None, *,
+                             grad_reduce: str = "bucketed",
+                             bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """dp(×tp)-parallel version of :func:`build_train_step` over ``mesh``.
 
-    Each shard runs value_and_grad on its batch slice, losses and
-    gradients are ``pmean``-ed across ``axis``, and every shard applies
-    the identical AdamW update to its replicated parameters — so the
-    global step equals the single-device step on the full batch (equal
-    shard sizes make mean-of-shard-means the global mean), which the
-    dp=N equivalence tests pin down to 1e-10.
+    Each data-parallel shard runs value_and_grad on its batch slice;
+    losses are ``pmean``-ed and gradients mean-reduced across the dp
+    axis with :func:`repro.shard.reduce_gradients` — bucketed by byte
+    size so XLA can overlap early buckets with the remaining backward
+    GEMMs (``grad_reduce="bucketed"``, bit-identical to the per-leaf
+    ``pmean`` it replaced; ``"blocking"`` and ``"ppermute"`` are the
+    reference and the ring-pipelined alternative).  Every shard then
+    applies the identical AdamW update, so the global step equals the
+    single-device step on the full batch, which the dp=N equivalence
+    tests pin to 1e-10.
+
+    When ``mesh`` carries a ``tp`` axis of size > 1, the step runs
+    Megatron-style tensor parallelism on top: parameters enter the
+    body per the LM axis rules (attention heads and the SwiGLU hidden
+    dim column/row-sharded on ``tp``, the rest replicated), the model
+    is rebuilt with ``tp_axis="tp"`` so each sublayer closes with a
+    ``psum`` over ``tp`` inside the shard_map body, and the AdamW
+    update runs elementwise on the local parameter blocks.
 
     Wrapping the returned function in ``offload(...)`` routes the
     per-shard forward AND backward GEMMs through the registry backend
-    (sites named ``shmap0/...``), with the same per-shard split
-    schedule a single-device run would use.
+    (sites named ``shmap0/...``) — the per-shard contraction extents
+    (``q_dim/tp``, ``d_ff/tp``, per-shard batch rows for ``dW``)
+    drive the size gate and plan lookup, exactly as a single device
+    of that shard size would.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    axis = axis or mesh.axis_names[0]
+    from repro.shard import (TP_AXIS, train_state_specs, validate_tp)
+
+    dp = axis or mesh.axis_names[0]
+    if dp == TP_AXIS and len(mesh.axis_names) > 1:
+        dp = next(a for a in mesh.axis_names if a != TP_AXIS)
+    tp = dict(mesh.shape).get(TP_AXIS, 1)
+    dp_size = dict(mesh.shape)[dp]
+
+    if tp > 1:
+        validate_tp(model.cfg, tp)
+        model = Model(model.cfg, tp_axis=TP_AXIS)
+        param_specs, opt_specs = train_state_specs(model.cfg)
+    else:
+        param_specs, opt_specs = P(), P()
 
     def per_shard_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
-        loss = jax.lax.pmean(loss, axis)
-        grads = jax.tree_util.tree_map(
-            lambda g: jax.lax.pmean(g, axis), grads)
+        loss = jax.lax.pmean(loss, dp)
+        grads = reduce_gradients(grads, dp, dp_size,
+                                 mode=grad_reduce,
+                                 bucket_bytes=bucket_bytes)
         params, opt_state = opt.update(grads, params, opt_state)
         return params, opt_state, loss
 
+    # check_rep=False: the tp model's custom_vjp collective wrappers
+    # have no replication-tracking rules, and all cross-shard sums
+    # here are explicit psums anyway.
     return shard_map(per_shard_step, mesh=mesh,
-                     in_specs=(P(), P(), P(axis)),
-                     out_specs=(P(), P(), P()))
+                     in_specs=(param_specs, opt_specs, P(dp)),
+                     out_specs=(param_specs, opt_specs, P()),
+                     check_rep=False)
 
 
 def _describe_sites(sites) -> None:
@@ -155,10 +198,21 @@ def _parse(argv):
                          "instead of an error); the intended path for "
                          "adopting a plan tuned at the resume state")
     ap.add_argument("--mesh", default="",
-                    help="mesh spec for data-parallel training (e.g. "
-                         "'dp=8'); empty = single device.  On CPU "
-                         "export XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N first")
+                    help="mesh spec: 'dp=8' (data parallel) or "
+                         "'dp=4,tp=2' (2-D: tp splits attention heads "
+                         "and the MLP hidden dim); empty = single "
+                         "device.  On CPU export XLA_FLAGS=--xla_"
+                         "force_host_platform_device_count=N first")
+    ap.add_argument("--grad-reduce", default="bucketed",
+                    choices=["bucketed", "blocking", "ppermute"],
+                    help="gradient all-reduce strategy on the dp axis "
+                         "(bucketed = overlapped with the remaining "
+                         "backward, bit-identical to pmean; ppermute "
+                         "= ring pipeline, replicas agree to rounding "
+                         "only)")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="gradient bucket size in MiB for "
+                         "--grad-reduce bucketed; 0 = default (4)")
     ap.add_argument("--min-dim", type=int, default=128,
                     help="offload size gate: min(m,k,n) for emulation")
     ap.add_argument("--ckpt-dir", default="",
@@ -266,14 +320,26 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                  f"{args.steps}; nothing to do")
         return []
 
-    mesh = batch_sharding = None
+    mesh = batch_sharding = state_specs = None
+    bucket_bytes = (int(args.bucket_mb * (1 << 20)) if args.bucket_mb
+                    else DEFAULT_BUCKET_BYTES)
     if args.mesh:
-        mesh, batch_sharding, (params, opt_state) = \
-            data_parallel_setup(args.mesh, args.global_batch,
-                                (params, opt_state))
-        log.info(f"mesh {args.mesh}: {mesh.size} devices, "
-                 f"per-shard batch {args.global_batch // mesh.size}")
-        train_step = build_sharded_train_step(model, opt, mesh)
+        mesh, batch_sharding, (params, opt_state), state_specs = \
+            train_mesh_setup(args.mesh, args.global_batch, cfg,
+                             (params, opt_state))
+        shape = dict(mesh.shape)
+        log.info(f"mesh {args.mesh}: {mesh.size} devices "
+                 f"(dp={shape.get('dp', 1)} tp={shape.get('tp', 1)}), "
+                 f"per-shard batch "
+                 f"{args.global_batch // shape.get('dp', 1)}, "
+                 f"grad-reduce {args.grad_reduce}")
+        if args.grad_reduce == "bucketed":
+            n_buckets, per_psum = bucket_stats(params, bucket_bytes)
+            log.info(f"gradient buckets: {n_buckets} psum(s), "
+                     f"{[round(b / 1024) for b in per_psum]} KiB")
+        train_step = build_sharded_train_step(
+            model, opt, mesh, grad_reduce=args.grad_reduce,
+            bucket_bytes=bucket_bytes)
     else:
         train_step = build_train_step(model, opt)
 
@@ -297,6 +363,18 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
         "backend": args.backend or None,
         "plan_path": args.plan or None,
     }
+    # A tp mesh writes the per-shard layout (one npz per tp shard +
+    # manifest); restore reassembles the global tree, so a later
+    # resume may use any mesh shape — or none.
+    tp_sharded = (state_specs is not None and mesh is not None
+                  and dict(mesh.shape).get("tp", 1) > 1)
+
+    def save_ckpt(step_no, state):
+        if tp_sharded:
+            checkpoint.save_sharded(ckpt_dir, step_no, state,
+                                    state_specs, mesh, meta=ckpt_meta)
+        else:
+            checkpoint.save(ckpt_dir, step_no, state, meta=ckpt_meta)
 
     # Telemetry (repro.obs): one MetricsRun per invocation, scoped to
     # the checkpoint lineage by default so test/tmp runs stay in tmp.
@@ -388,10 +466,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                          f"({(now - t_last) * 1e3:.0f} ms)")
                 t_last = now
             if (step + 1) % args.ckpt_every == 0:
-                checkpoint.save(ckpt_dir, step + 1,
-                                (params, opt_state), meta=ckpt_meta)
-        checkpoint.save(ckpt_dir, args.steps, (params, opt_state),
-                        meta=ckpt_meta)
+                save_ckpt(step + 1, (params, opt_state))
+        save_ckpt(args.steps, (params, opt_state))
     finally:
         if metrics is not None:
             # Drain async site-event callbacks before the final

@@ -84,17 +84,72 @@ def _sdpa(q, k, v, mask):
     return out
 
 
+def _tp_enter(axis):
+    """Identity forward, ``psum`` over ``axis`` backward.
+
+    Megatron's ``f``: wraps the (replicated) input of a tensor-parallel
+    block.  Each tp shard's backward produces only its partial
+    contribution to the cotangent; the psum completes it, so the
+    residual stream and every replicated parameter upstream see the
+    full gradient.
+    """
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None),
+             lambda _, g: (jax.lax.psum(g, axis),))
+    return f
+
+
+def _tp_exit(axis):
+    """``psum`` over ``axis`` forward, identity backward.
+
+    Megatron's ``g``: closes a tensor-parallel block after the
+    row-parallel matmul (``wo`` / ``w_down``), summing the per-shard
+    partial products into the replicated output.  The backward is the
+    identity because the incoming cotangent is already replicated.
+    """
+    @jax.custom_vjp
+    def g(x):
+        return jax.lax.psum(x, axis)
+
+    g.defvjp(lambda x: (jax.lax.psum(x, axis), None),
+             lambda _, ct: (ct,))
+    return g
+
+
 class Model:
     """A decoder-only LM bound to an :class:`~repro.configs.LMConfig`.
 
     All methods are pure functions of ``(params, ...)`` and safe to
     ``jit`` / ``grad`` / wrap in :func:`repro.core.intercept.offload`.
+
+    ``tp_axis`` (a mesh axis name) switches the block math to
+    Megatron-style tensor parallelism for use *inside* a ``shard_map``
+    body: the attention projections and the SwiGLU hidden dim are
+    column-parallel (each shard holds ``num_heads/tp`` heads and
+    ``d_ff/tp`` hidden columns), ``wo``/``w_down`` are row-parallel,
+    and each sublayer output is completed with one ``lax.psum`` over
+    ``tp_axis``.  The head counts are derived from the *local*
+    parameter shapes, so the same code runs the full model
+    (``tp_axis=None``) and any shard width.  Gradients of replicated
+    parameters (norms, embeddings, head) are completed by the
+    identity-forward/psum-backward wrapper around each block input, so
+    ``value_and_grad`` of :meth:`loss` is exact per shard.
     """
 
-    def __init__(self, cfg: LMConfig):
+    def __init__(self, cfg: LMConfig, tp_axis: str | None = None):
         self.cfg = cfg
+        self.tp_axis = tp_axis
         self.dtype = jnp.dtype(cfg.dtype)
         self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    def _tp_in(self, x):
+        return _tp_enter(self.tp_axis)(x) if self.tp_axis else x
+
+    def _tp_out(self, x):
+        return _tp_exit(self.tp_axis)(x) if self.tp_axis else x
 
     # -- parameters --------------------------------------------------
 
@@ -139,31 +194,43 @@ class Model:
     # -- shared block pieces -----------------------------------------
 
     def _qkv(self, lp, x, positions):
-        """Project + reshape + rope.  x: (B, T, d) -> q/k/v heads."""
+        """Project + reshape + rope.  x: (B, T, d) -> q/k/v heads.
+
+        Head counts come from the projection shapes, not the config,
+        so under tensor parallelism (column-sharded ``wq``/``wk``/
+        ``wv``) each shard produces its ``num_heads / tp`` local heads
+        from the same code.
+        """
         cfg = self.cfg
         B, T = x.shape[:2]
-        h = _rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-        q = (h @ lp["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
-        k = (h @ lp["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
-        v = (h @ lp["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        h = self._tp_in(_rms_norm(x, lp["attn_norm"], cfg.norm_eps))
+        q = (h @ lp["wq"]).reshape(B, T, -1, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(B, T, -1, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(B, T, -1, cfg.head_dim)
         q = _rope(q, positions, cfg.rope_theta)
         k = _rope(k, positions, cfg.rope_theta)
         return q, k, v
 
     def _attn_out(self, lp, x, o):
         B, T = x.shape[:2]
-        o = o.reshape(B, T, self.cfg.q_dim)
-        return x + o @ lp["wo"]
+        o = o.reshape(B, T, -1)
+        return x + self._tp_out(o @ lp["wo"])
 
     def _mlp(self, lp, x):
-        h = _rms_norm(x, lp["mlp_norm"], self.cfg.norm_eps)
+        h = self._tp_in(_rms_norm(x, lp["mlp_norm"],
+                                  self.cfg.norm_eps))
         gate = jax.nn.silu((h @ lp["w_gate"]).astype(jnp.float32))
         up = (h @ lp["w_up"]).astype(jnp.float32)
-        return x + ((gate * up).astype(x.dtype) @ lp["w_down"])
+        return x + self._tp_out((gate * up).astype(x.dtype)
+                                @ lp["w_down"])
 
-    def _repeat_kv(self, kv):
-        """(B, S, KV, d) -> (B, S, H, d) for grouped-query attention."""
-        rep = self.cfg.num_heads // self.cfg.num_kv_heads
+    def _repeat_kv(self, kv, num_heads):
+        """(B, S, KV, d) -> (B, S, H, d) for grouped-query attention.
+
+        ``num_heads`` is the query head count *of this shard* (under
+        tp, ``cfg.num_heads / tp``), so the group size is preserved.
+        """
+        rep = num_heads // kv.shape[2]
         return jnp.repeat(kv, rep, axis=2) if rep > 1 else kv
 
     def _head(self, params, x):
@@ -186,7 +253,9 @@ class Model:
 
         def block(x, lp):
             q, k, v = self._qkv(lp, x, positions)
-            o = _sdpa(q, self._repeat_kv(k), self._repeat_kv(v), mask)
+            H = q.shape[2]
+            o = _sdpa(q, self._repeat_kv(k, H), self._repeat_kv(v, H),
+                      mask)
             x = self._attn_out(lp, x, o)
             x = self._mlp(lp, x)
             return x, None
@@ -256,8 +325,9 @@ class Model:
             v_buf = jax.vmap(write)(v_buf, v, start)
             k_all = jnp.moveaxis(k_buf, 1, 2)  # (B, S, KV, d)
             v_all = jnp.moveaxis(v_buf, 1, 2)
-            o = _sdpa(q, self._repeat_kv(k_all), self._repeat_kv(v_all),
-                      mask)
+            H = q.shape[2]
+            o = _sdpa(q, self._repeat_kv(k_all, H),
+                      self._repeat_kv(v_all, H), mask)
             x = self._attn_out(lp, x, o)
             x = self._mlp(lp, x)
             return x, (k_buf, v_buf)

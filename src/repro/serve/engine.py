@@ -22,11 +22,19 @@ because serving traces only the forward sites.
 
 Multi-device serving: pass ``mesh=`` to shard the engine across the
 slot (batch) axis — parameters replicated, the KV cache and every
-prefill/decode batch partitioned over the mesh's first axis, so each
-device owns ``batch_slots / mesh.size`` slots.  Prefill waves are
-right-padded to a multiple of the mesh size so the sub-batch always
+prefill/decode batch partitioned over the data-parallel axis, so each
+dp group owns ``batch_slots / dp`` slots.  Prefill waves are
+right-padded to a multiple of the dp extent so the sub-batch always
 divides evenly.  Per-slot independence (above) makes the sharded
 engine emit exactly the tokens the single-device engine would.
+
+A 2-D ``dp×tp`` mesh additionally shards the *parameters* for
+prefill/decode per the LM axis rules (:mod:`repro.shard.rules`):
+attention heads and the SwiGLU hidden dim split over ``tp``, the KV
+cache split over ``tp`` on its kv-head axis — XLA's SPMD partitioner
+inserts the tp collectives from the sharding annotations, so each
+device holds ``1/tp`` of every projection and ``1/(dp*tp)`` of the
+KV cache.
 """
 
 from __future__ import annotations
@@ -44,7 +52,8 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.core import PrecisionPolicy, offload
 from repro.models import Model
 from repro.obs import get_logger
-from repro.shard import data_parallel_sharding
+from repro.shard import (TP_AXIS, data_parallel_sharding,
+                         lm_param_specs, state_shardings, validate_tp)
 
 __all__ = ["Engine", "Request"]
 
@@ -89,8 +98,10 @@ class Engine:
       max_len: KV-cache capacity per slot; a request finishes early if
         ``prompt + generated`` would outgrow it.
       mesh: optional :class:`jax.sharding.Mesh`; shards the slot axis
-        over the mesh's first axis (``batch_slots`` must divide by the
-        mesh size).
+        over the data-parallel axis (``batch_slots`` must divide by
+        the dp extent).  A 2-D ``dp×tp`` mesh also tp-shards the
+        parameters and the KV cache's kv-head axis per the LM axis
+        rules (``tp`` must divide ``num_kv_heads``).
       plan: optional :class:`repro.tune.PrecisionPlan` loaded at
         startup — the prefill and decode programs run through the
         automatic offload transform under the plan's policy.  Plans
@@ -119,19 +130,40 @@ class Engine:
         self.batch_slots = int(batch_slots)
         self.max_len = int(max_len)
         self.mesh = mesh
+        self._dp_size = 1
         if mesh is not None:
-            if self.batch_slots % mesh.size:
+            shape = dict(mesh.shape)
+            tp = shape.get(TP_AXIS, 1)
+            dp_axis = next((a for a in mesh.axis_names
+                            if a != TP_AXIS), mesh.axis_names[0])
+            self._dp_size = shape[dp_axis]
+            if self.batch_slots % self._dp_size:
                 raise ValueError(
                     f"batch_slots={self.batch_slots} is not divisible "
-                    f"by mesh size {mesh.size}")
-            # The canonical DP placements come from repro.shard; only
+                    f"by the data-parallel extent {dp_axis}="
+                    f"{self._dp_size}")
+            # The canonical placements come from repro.shard; only
             # the KV layout (slots on dim 1 of (layers, batch, ...))
             # is serve-specific.
-            replicated, self._slot_sharding = \
-                data_parallel_sharding(mesh)
-            self._kv_sharding = NamedSharding(
-                mesh, PartitionSpec(None, mesh.axis_names[0]))
-            params = jax.device_put(params, replicated)
+            if tp > 1:
+                # 2-D: parameters tp-sharded per the LM axis rules,
+                # KV cache additionally split over tp on its kv-head
+                # axis (dim 2); XLA's SPMD partitioner derives the tp
+                # collectives from these annotations.
+                validate_tp(model.cfg, tp)
+                params = jax.device_put(
+                    params,
+                    state_shardings(mesh, lm_param_specs(model.cfg)))
+                self._slot_sharding = NamedSharding(
+                    mesh, PartitionSpec(dp_axis))
+                self._kv_sharding = NamedSharding(
+                    mesh, PartitionSpec(None, dp_axis, TP_AXIS))
+            else:
+                replicated, self._slot_sharding = \
+                    data_parallel_sharding(mesh, dp_axis)
+                self._kv_sharding = NamedSharding(
+                    mesh, PartitionSpec(None, dp_axis))
+                params = jax.device_put(params, replicated)
         self.params = params
         self.cache = self._pin(
             model.init_cache(self.batch_slots, self.max_len))
@@ -210,11 +242,11 @@ class Engine:
         lengths = np.array([len(r.prompt) for _, r in batch], np.int32)
         P = min(_round_up(int(lengths.max())), self.max_len)
         # With a mesh the wave is right-padded (dummy rows: empty
-        # prompt, length 1) to a multiple of the mesh size so the
+        # prompt, length 1) to a multiple of the dp extent so the
         # prefill batch shards evenly; dummy rows are dropped before
         # the scatter.
         rows = (len(batch) if self.mesh is None
-                else _round_up(len(batch), self.mesh.size))
+                else _round_up(len(batch), self._dp_size))
         tokens = np.zeros((rows, P), np.int32)
         for row, (_, req) in enumerate(batch):
             tokens[row, :len(req.prompt)] = req.prompt

@@ -18,8 +18,15 @@ Helpers:
 * :func:`data_parallel_sharding` — the canonical DP placement:
   parameters (and optimizer state) replicated, the batch split on its
   leading axis;
-* :func:`replicate` / :func:`shard_batch` — ``device_put`` shortcuts
-  for those two placements.
+* :func:`train_mesh_setup` — the 2-D (``dp``×``tp``) bring-up for the
+  train/tune CLIs: axis names validated against :data:`TRAIN_AXES`,
+  batch divisibility checked against the ``dp`` extent, and the train
+  state placed per the LM axis rules (:mod:`repro.shard.rules` — tp
+  splits attention heads and the SwiGLU hidden dim, everything else
+  replicated);
+* :mod:`repro.shard.collectives` — bucketed / ``ppermute``-pipelined
+  gradient all-reduce for the sharded train step;
+* :func:`replicate` / :func:`shard_batch` — ``device_put`` shortcuts.
 """
 
 from __future__ import annotations
@@ -31,13 +38,30 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.shard.collectives import (DEFAULT_BUCKET_BYTES,
+                                     GRAD_REDUCE_MODES, bucket_stats,
+                                     bucketed_psum, reduce_gradients,
+                                     ring_all_reduce)
+from repro.shard.rules import (DP_AXIS, TP_AXIS, TRAIN_AXES,
+                               lm_param_specs, rules_to_specs,
+                               specs_to_rules, state_shardings,
+                               train_state_specs, validate_tp)
+
 __all__ = [
     "parse_mesh_spec",
     "build_mesh",
     "data_parallel_sharding",
     "data_parallel_setup",
+    "train_mesh_setup",
     "replicate",
     "shard_batch",
+    # repro.shard.rules
+    "DP_AXIS", "TP_AXIS", "TRAIN_AXES", "validate_tp",
+    "lm_param_specs", "train_state_specs", "specs_to_rules",
+    "rules_to_specs", "state_shardings",
+    # repro.shard.collectives
+    "DEFAULT_BUCKET_BYTES", "GRAD_REDUCE_MODES", "bucket_stats",
+    "bucketed_psum", "reduce_gradients", "ring_all_reduce",
 ]
 
 
@@ -130,6 +154,84 @@ def data_parallel_setup(spec: str, global_batch: int, state=None):
     if state is not None:
         state = jax.device_put(state, replicated)
     return mesh, batch_sharding, state
+
+
+def train_mesh_setup(spec: str, global_batch: int, cfg=None,
+                     state=None):
+    """2-D ``dp``×``tp`` mesh bring-up for the train/tune CLIs.
+
+    Validates everything that used to fail deep inside ``shard_map``
+    tracing *up front*, with CLI-grade messages:
+
+    * axis names must come from :data:`TRAIN_AXES` (``dp`` = data
+      parallel over the batch, ``tp`` = tensor parallel over attention
+      heads / the SwiGLU hidden dim);
+    * ``dp*tp`` must fit the visible device count (via
+      :func:`build_mesh`, which prints the virtual-device recipe);
+    * ``global_batch`` must divide by the ``dp`` extent — *not* the
+      mesh size: tp shards all see the same batch slice;
+    * with ``tp > 1``, the tp degree must divide the LM config's head
+      and hidden extents (:func:`repro.shard.rules.validate_tp`).
+
+    The mesh is always built dp-major (``("dp", "tp")``) regardless of
+    the order in ``spec``, so adjacent devices form a tp group.
+    ``state = (params, opt_state)``, when given, is placed per the LM
+    axis rules: tp-sharded projections, everything else replicated.
+
+    Returns ``(mesh, batch_sharding, state, state_specs)`` where
+    ``state_specs`` is the ``(params, opt_state)`` PartitionSpec
+    pytree (also what the sharded checkpoint manifest records).
+
+    Raises ``SystemExit`` (these are CLI drivers) on bad specs.
+    """
+    try:
+        axes = parse_mesh_spec(spec)
+    except ValueError as e:
+        raise SystemExit(f"[shard] {e}") from None
+    unknown = [a for a in axes if a not in TRAIN_AXES]
+    if unknown:
+        raise SystemExit(
+            f"[shard] mesh {spec!r}: unknown axis name(s) "
+            f"{', '.join(repr(a) for a in unknown)}; valid axes are "
+            f"'{DP_AXIS}' (data parallel, splits the batch) and "
+            f"'{TP_AXIS}' (tensor parallel, splits attention heads "
+            "and the MLP hidden dim), e.g. --mesh dp=4,tp=2")
+    dp = axes.get(DP_AXIS, 1)
+    tp = axes.get(TP_AXIS, 1)
+    canonical = f"{DP_AXIS}={dp},{TP_AXIS}={tp}"
+    try:
+        mesh = build_mesh(canonical)
+    except ValueError as e:
+        # build_mesh validates dp*tp <= len(jax.devices()) and its
+        # message carries the XLA_FLAGS recipe; surface it before any
+        # tracing starts.
+        raise SystemExit(f"[shard] {e}") from None
+    if global_batch % dp:
+        raise SystemExit(
+            f"[shard] global batch {global_batch} is not divisible by "
+            f"the data-parallel extent dp={dp} ({spec!r}); tensor "
+            "parallelism does not split the batch, so only dp counts")
+    if tp > 1:
+        if cfg is None:
+            raise SystemExit(f"[shard] mesh {spec!r} has tp={tp} but "
+                             "no model config to derive axis rules")
+        try:
+            validate_tp(cfg, tp)
+        except ValueError as e:
+            raise SystemExit(f"[shard] {e}") from None
+    state_specs = (train_state_specs(cfg) if tp > 1 and cfg is not None
+                   else (None if cfg is None else jax.tree_util.tree_map(
+                       lambda _: PartitionSpec(),
+                       train_state_specs(cfg),
+                       is_leaf=lambda x: isinstance(x, PartitionSpec))))
+    if state is not None:
+        if state_specs is not None:
+            state = jax.device_put(
+                state, state_shardings(mesh, state_specs))
+        else:
+            state = replicate(state, mesh)
+    batch_sharding = NamedSharding(mesh, PartitionSpec(DP_AXIS))
+    return mesh, batch_sharding, state, state_specs
 
 
 def replicate(tree, mesh: Mesh):

@@ -1,0 +1,148 @@
+"""Gradient all-reduce strategies for the sharded train step.
+
+The naive post-backward reduction — one ``pmean`` per gradient leaf —
+serializes a long tail of small collectives after the whole backward
+pass.  The strategies here keep the math bit-identical (``pmean`` *is*
+``psum`` followed by division by the axis size) while giving XLA room
+to overlap communication with the remaining backward GEMMs:
+
+* :func:`bucketed_psum` — the default.  Gradient leaves are greedily
+  grouped into byte-size buckets in flatten order and each bucket is
+  reduced with a *single* multi-operand ``psum``, so the collective
+  for an early bucket can be issued while later gradients are still
+  being computed, and small leaves (norms) amortize launch overhead.
+* :func:`ring_all_reduce` — a ``ppermute``-pipelined reduce behind the
+  ``--grad-reduce ppermute`` flag.  N-1 neighbor hops accumulate the
+  sum around the ring; per-shard accumulation *order* differs, so
+  replicas agree only to rounding — it trades the bit-identity
+  guarantee for point-to-point traffic, which is why it is opt-in.
+
+:func:`bucket_stats` reports the bucketing a tree would get (bucket
+count, bytes per ``psum``) — the ``bench_train_2d`` benchmark row and
+the train-loop telemetry both record it.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["DEFAULT_BUCKET_BYTES", "bucket_indices", "bucket_stats",
+           "bucketed_psum", "ring_all_reduce", "reduce_gradients",
+           "GRAD_REDUCE_MODES"]
+
+#: Default gradient bucket size (4 MiB).  Big enough that projection
+#: matrices of the small presets land in one collective each, small
+#: enough that a multi-layer model produces several buckets to overlap.
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+GRAD_REDUCE_MODES = ("bucketed", "blocking", "ppermute")
+
+
+def _nbytes(leaf) -> int:
+    return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+
+
+def bucket_indices(leaves, bucket_bytes: int) -> List[List[int]]:
+    """Greedy, order-preserving bucketing of flat leaves by byte size.
+
+    A leaf larger than ``bucket_bytes`` gets a bucket of its own; the
+    bucket boundary is never allowed to split a leaf.
+    """
+    buckets: List[List[int]] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i, leaf in enumerate(leaves):
+        nb = _nbytes(leaf)
+        if cur and cur_bytes + nb > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nb
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def bucket_stats(tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES
+                 ) -> Tuple[int, List[int]]:
+    """``(bucket_count, bytes_per_psum)`` for ``tree``'s leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    buckets = bucket_indices(leaves, bucket_bytes)
+    return len(buckets), [sum(_nbytes(leaves[i]) for i in idx)
+                          for idx in buckets]
+
+
+def bucketed_psum(tree, axis: str,
+                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                  mean_size: int | None = None):
+    """Reduce ``tree`` over ``axis`` with one fused psum per bucket.
+
+    With ``mean_size`` the result is divided by it afterwards — the
+    exact op sequence ``lax.pmean`` lowers to, so a bucketed mean is
+    bit-identical to the per-leaf ``pmean`` it replaces.  Buckets are
+    issued in flatten order without a barrier between them, so XLA's
+    scheduler can start early buckets while later gradients are still
+    in flight.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = [None] * len(leaves)
+    for idx in bucket_indices(leaves, bucket_bytes):
+        reduced = jax.lax.psum(tuple(leaves[i] for i in idx), axis)
+        for i, r in zip(idx, reduced):
+            out[i] = r / mean_size if mean_size else r
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ring_all_reduce(tree, axis: str, axis_size: int,
+                    mean: bool = False):
+    """``ppermute``-pipelined ring reduction over ``axis``.
+
+    Every leaf takes ``axis_size - 1`` neighbor hops; hop ``j`` of one
+    leaf can overlap hop ``j+1`` of another, trading one big collective
+    for a pipeline of point-to-point transfers.  Each shard accumulates
+    contributions in its own ring order, so replicas of the result
+    agree only to floating-point rounding — callers that need
+    bit-identical replicas use :func:`bucketed_psum` instead.
+    """
+    if axis_size < 1:
+        raise ValueError(f"axis_size must be >= 1, got {axis_size}")
+    perm = [(j, (j + 1) % axis_size) for j in range(axis_size)]
+
+    def ring(x):
+        acc = x
+        for _ in range(axis_size - 1):
+            x = jax.lax.ppermute(x, axis, perm)
+            acc = acc + x
+        return acc / axis_size if mean else acc
+
+    return jax.tree_util.tree_map(ring, tree)
+
+
+def reduce_gradients(grads, axis: str, axis_size: int,
+                     mode: str = "bucketed",
+                     bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Mean-reduce a gradient pytree over the data-parallel axis.
+
+    ``mode``: ``bucketed`` (default, overlappable, bit-identical to
+    per-leaf pmean), ``blocking`` (an optimization barrier forces the
+    whole backward to finish, then a single full-tree psum runs — the
+    serialization the bucketed path exists to avoid; kept as the
+    ``bench_train_2d`` reference), or ``ppermute`` (ring pipeline,
+    replicas agree to rounding only).
+    """
+    if mode == "bucketed":
+        return bucketed_psum(grads, axis, bucket_bytes,
+                             mean_size=axis_size)
+    if mode == "blocking":
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        leaves = jax.lax.optimization_barrier(tuple(leaves))
+        reduced = jax.lax.psum(tuple(leaves), axis)
+        return jax.tree_util.tree_unflatten(
+            treedef, [r / axis_size for r in reduced])
+    if mode == "ppermute":
+        return ring_all_reduce(grads, axis, axis_size, mean=True)
+    raise ValueError(f"unknown gradient-reduce mode {mode!r}; "
+                     f"expected one of {GRAD_REDUCE_MODES}")

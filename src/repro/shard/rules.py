@@ -1,0 +1,125 @@
+"""Per-parameter sharding rules for the LM pytree on a dp×tp mesh.
+
+One table, used by the train step (shard_map in/out specs), the serve
+engine (tp-sharded ``device_put``), and the sharded checkpoint writer
+(axis rules in the layout manifest):
+
+=============  =======================  ===========================
+parameter      spec                     meaning
+=============  =======================  ===========================
+wq, wk, wv     P(None, None, "tp")      column-parallel: each shard
+                                        holds ``num_heads/tp`` query
+                                        (``num_kv_heads/tp`` kv) heads
+w_gate, w_up   P(None, None, "tp")      column-parallel: ``d_ff/tp``
+                                        hidden columns per shard
+wo, w_down     P(None, "tp", None)      row-parallel: contracts over
+                                        the shard's local columns,
+                                        completed by a tp ``psum``
+embed, norms,  P()                      replicated (their gradients
+lm_head                                 are completed by the
+                                        identity-fwd/psum-bwd wrapper
+                                        in :mod:`repro.models.lm`)
+=============  =======================  ===========================
+
+The ``dp`` axis never appears in parameter specs — parameters are
+replicated across data-parallel replicas and only the batch is split
+on ``dp``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["DP_AXIS", "TP_AXIS", "TRAIN_AXES", "validate_tp",
+           "lm_param_specs", "train_state_specs", "specs_to_rules",
+           "rules_to_specs", "state_shardings"]
+
+#: The two mesh axes the training stack understands.
+DP_AXIS = "dp"
+TP_AXIS = "tp"
+TRAIN_AXES = (DP_AXIS, TP_AXIS)
+
+
+def validate_tp(cfg, tp: int) -> None:
+    """Raise if a tp degree cannot shard this LM config evenly.
+
+    Column-parallel attention shards whole heads and row-parallel MLP
+    shards hidden columns, so ``tp`` must divide ``num_heads``,
+    ``num_kv_heads`` and ``d_ff``.
+    """
+    bad = [f"{k}={v}" for k, v in (("num_heads", cfg.num_heads),
+                                   ("num_kv_heads", cfg.num_kv_heads),
+                                   ("d_ff", cfg.d_ff)) if v % tp]
+    if bad:
+        raise ValueError(
+            f"tp={tp} cannot shard config {cfg.name!r}: it must "
+            f"divide " + ", ".join(bad))
+
+
+def lm_param_specs(cfg, tp_axis: str = TP_AXIS) -> dict:
+    """PartitionSpec pytree matching ``Model.init_params`` output."""
+    P = PartitionSpec
+    col = P(None, None, tp_axis)   # (L, d, out): split output columns
+    row = P(None, tp_axis, None)   # (L, in, d): split input rows
+    specs = {
+        "embed": P(),
+        "blocks": {
+            "attn_norm": P(), "mlp_norm": P(),
+            "wq": col, "wk": col, "wv": col, "wo": row,
+            "w_gate": col, "w_up": col, "w_down": row,
+        },
+        "final_norm": P(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P()
+    return specs
+
+
+def train_state_specs(cfg, tp_axis: str = TP_AXIS) -> tuple:
+    """Specs for the full ``(params, opt_state)`` train state.
+
+    AdamW moments mirror the parameter layout leaf for leaf; the step
+    counter is a replicated scalar.
+    """
+    p = lm_param_specs(cfg, tp_axis)
+    return p, {"step": PartitionSpec(), "mu": p, "nu": p}
+
+
+def specs_to_rules(specs_tree, state_tree) -> List[List[Optional[str]]]:
+    """Flatten a spec pytree to per-leaf axis-rule lists.
+
+    Each leaf's rule is a list as long as its rank, entries either an
+    axis name or ``None`` — the JSON-friendly form the checkpoint
+    manifest records.
+    """
+    specs = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    leaves = jax.tree_util.tree_leaves(state_tree)
+    if len(specs) != len(leaves):
+        raise ValueError(f"{len(specs)} specs for {len(leaves)} leaves")
+    rules = []
+    for spec, leaf in zip(specs, leaves):
+        ents = list(spec) + [None] * (leaf.ndim - len(spec))
+        rule = []
+        for e in ents:
+            if e is not None and not isinstance(e, str):
+                raise ValueError(f"unsupported spec entry {e!r} "
+                                 "(nested tuples) in checkpoint rules")
+            rule.append(e)
+        rules.append(rule)
+    return rules
+
+
+def rules_to_specs(rules) -> List[PartitionSpec]:
+    """Inverse of :func:`specs_to_rules` (per-leaf, flat)."""
+    return [PartitionSpec(*rule) for rule in rules]
+
+
+def state_shardings(mesh: Mesh, specs_tree):
+    """Spec pytree -> NamedSharding pytree for ``device_put``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -11,10 +11,24 @@ structure-donor pytree (``like``) and validates leaf count, shapes and
 dtypes against it, raising :class:`CheckpointError` on any mismatch so
 callers can distinguish "no/incompatible checkpoint" (fall back to
 fresh init) from genuine bugs (propagate).
+
+Tensor-parallel runs use the *sharded* layout instead
+(:func:`save_sharded`): a ``step_<n>/`` directory holding one npz per
+tp shard plus ``manifest.json`` — the layout record (mesh shape,
+per-leaf axis rules, layout fingerprint, user metadata).  The
+directory is staged under a ``.tmp`` name and renamed into place, so
+a complete-looking directory always holds every shard it promises;
+anything less (a stranded partial set, a manifest that disagrees with
+the restore target) raises :class:`CheckpointError` instead of
+loading garbage.  :func:`restore` reassembles the *global* arrays
+from the shards, so a later resume may re-shard onto any mesh shape —
+or run single-device.  :func:`latest_step`, :func:`restore` and
+:func:`load_meta` accept both layouts transparently.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -24,14 +38,18 @@ from typing import Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointError", "latest_step", "save", "restore",
-           "load_meta"]
+__all__ = ["CheckpointError", "latest_step", "save", "save_sharded",
+           "restore", "load_meta"]
 
 _STEP_RE = re.compile(r"step_(\d+)\.npz$")
+_DIR_RE = re.compile(r"step_(\d+)$")
 
 #: Reserved npz key holding the JSON metadata record (precision-plan
 #: fingerprint, backend spec).  Never counted as a pytree leaf.
 _META_KEY = "__meta__"
+
+_MANIFEST = "manifest.json"
+_FORMAT = "repro-sharded-ckpt"
 
 
 class CheckpointError(RuntimeError):
@@ -42,18 +60,33 @@ def _path(ckpt_dir, step: int) -> Path:
     return Path(ckpt_dir) / f"step_{int(step):08d}.npz"
 
 
+def _dir_path(ckpt_dir, step: int) -> Path:
+    return Path(ckpt_dir) / f"step_{int(step):08d}"
+
+
+def _shard_name(i: int, num_shards: int) -> str:
+    return f"shard_{i:05d}_of_{num_shards:05d}.npz"
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
     """Highest step with a complete checkpoint in ``ckpt_dir``, or None.
 
-    Only exact ``step_<n>.npz`` names count — in particular a stranded
-    ``step_<n>.npz.tmp`` from a killed :func:`save` is never mistaken
-    for a resumable checkpoint (the fullmatch excludes any suffix).
+    Both layouts count: ``step_<n>.npz`` files and sharded
+    ``step_<n>/`` directories that contain a manifest.  Only exact
+    names match — a stranded ``step_<n>.npz.tmp`` (or ``.tmp``
+    staging directory) from a killed save is never mistaken for a
+    resumable checkpoint (the fullmatch excludes any suffix), and a
+    directory without its manifest never got renamed into place by a
+    completed save, so it cannot appear here.
     """
     d = Path(ckpt_dir)
     if not d.is_dir():
         return None
     steps = [int(m.group(1)) for f in d.iterdir()
              if (m := _STEP_RE.fullmatch(f.name))]
+    steps += [int(m.group(1)) for f in d.iterdir()
+              if (m := _DIR_RE.fullmatch(f.name)) and f.is_dir()
+              and (f / _MANIFEST).is_file()]
     return max(steps) if steps else None
 
 
@@ -100,6 +133,196 @@ def save(ckpt_dir, step: int, tree, meta: Optional[dict] = None) -> Path:
     return final
 
 
+def _layout_fingerprint(leaves_desc, axis_rules, num_shards: int) -> str:
+    """Stable identity of a sharded layout (shapes+dtypes+rules)."""
+    blob = json.dumps({"leaves": leaves_desc, "axis_rules": axis_rules,
+                       "num_shards": num_shards},
+                      sort_keys=True, separators=(",", ":"))
+    return "sha256:" + hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def save_sharded(ckpt_dir, step: int, tree, specs, mesh,
+                 meta: Optional[dict] = None) -> Path:
+    """Write ``tree`` as per-shard npz files + a layout manifest.
+
+    ``specs`` is a PartitionSpec pytree matching ``tree`` (the LM axis
+    rules from :mod:`repro.shard.rules`); ``mesh`` supplies the axis
+    sizes.  Leaves whose spec names a mesh axis are sliced along that
+    dimension, one block per shard file; replicated leaves are stored
+    once, in shard 0.  The manifest records the mesh shape, per-leaf
+    axis rules, a layout fingerprint, and ``meta`` (same contract as
+    :func:`save`'s).
+
+    Crash-atomic like :func:`save`: every file is fsync'd into a
+    ``.tmp`` staging directory which is then renamed over the final
+    ``step_<n>/`` name — readers never see a partial shard set under
+    the real name.
+    """
+    from repro.shard.rules import specs_to_rules
+
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    leaves = [np.asarray(leaf) for leaf in leaves]
+    rules = specs_to_rules(specs, tree)
+    axes = {a for rule in rules for a in rule if a is not None}
+    if len(axes) > 1:
+        raise CheckpointError(
+            f"sharded save supports one sharded axis, got {sorted(axes)}")
+    shard_axis = axes.pop() if axes else None
+    num_shards = dict(mesh.shape)[shard_axis] if shard_axis else 1
+    leaves_desc = [{"shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+                   for leaf in leaves]
+    manifest = {
+        "format": _FORMAT, "version": 1, "step": int(step),
+        "mesh": {k: int(v) for k, v in dict(mesh.shape).items()},
+        "shard_axis": shard_axis, "num_shards": int(num_shards),
+        "shards": [_shard_name(i, num_shards)
+                   for i in range(num_shards)],
+        "axis_rules": rules, "leaves": leaves_desc,
+        "fingerprint": _layout_fingerprint(leaves_desc, rules,
+                                           num_shards),
+        "meta": meta if meta is not None else {},
+    }
+
+    final = _dir_path(d, step)
+    tmp = final.with_name(final.name + ".tmp")
+    if tmp.exists():  # stranded staging dir from a killed save
+        for f in tmp.iterdir():
+            f.unlink()
+        tmp.rmdir()
+    tmp.mkdir()
+
+    def _write(path: Path, writer) -> None:
+        with open(path, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())
+
+    for i in range(num_shards):
+        payload = {}
+        for li, (leaf, rule) in enumerate(zip(leaves, rules)):
+            dims = [di for di, a in enumerate(rule) if a is not None]
+            if dims:
+                di = dims[0]
+                block = leaf.shape[di] // num_shards
+                payload[f"leaf_{li:05d}"] = np.take(
+                    leaf, range(i * block, (i + 1) * block), axis=di)
+            elif i == 0:
+                payload[f"leaf_{li:05d}"] = leaf
+        _write(tmp / _shard_name(i, num_shards),
+               lambda f, p=payload: np.savez(f, **p))
+    _write(tmp / _MANIFEST,
+           lambda f: f.write(json.dumps(manifest, indent=1,
+                                        sort_keys=True).encode()))
+
+    if final.is_dir():  # re-save of the same step: replace wholesale
+        for f in final.iterdir():
+            f.unlink()
+        final.rmdir()
+    os.replace(tmp, final)
+    try:
+        dir_fd = os.open(d, os.O_RDONLY)
+    except OSError:  # pragma: no cover - no dir open (e.g. Windows)
+        return final
+    try:
+        os.fsync(dir_fd)  # make the rename itself durable
+    except OSError:  # pragma: no cover - fs without dir fsync
+        pass
+    finally:
+        os.close(dir_fd)
+    return final
+
+
+def _read_manifest(dirpath: Path) -> dict:
+    mpath = dirpath / _MANIFEST
+    if not mpath.is_file():
+        raise CheckpointError(
+            f"{dirpath} has no {_MANIFEST} — not a sharded checkpoint "
+            "(or an interrupted one that should have stayed .tmp)")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"{mpath}: invalid JSON ({e})") from None
+    if not isinstance(manifest, dict) \
+            or manifest.get("format") != _FORMAT:
+        raise CheckpointError(f"{mpath}: not a {_FORMAT} manifest")
+    needed = {"num_shards", "shards", "axis_rules", "leaves",
+              "fingerprint"}
+    if missing := needed - manifest.keys():
+        raise CheckpointError(f"{mpath}: manifest is missing "
+                              f"{sorted(missing)}")
+    fp = _layout_fingerprint(manifest["leaves"],
+                             manifest["axis_rules"],
+                             manifest["num_shards"])
+    if fp != manifest["fingerprint"]:
+        raise CheckpointError(
+            f"{mpath}: layout fingerprint mismatch ({fp} != "
+            f"{manifest['fingerprint']}) — manifest edited or "
+            "corrupted; refusing to guess the layout")
+    return manifest
+
+
+def _restore_sharded(dirpath: Path, like):
+    """Reassemble the global pytree from a ``step_<n>/`` directory."""
+    manifest = _read_manifest(dirpath)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    desc, rules = manifest["leaves"], manifest["axis_rules"]
+    num_shards = int(manifest["num_shards"])
+    if len(desc) != len(leaves_like):
+        raise CheckpointError(
+            f"{dirpath} holds {len(desc)} leaves, expected "
+            f"{len(leaves_like)} — architecture/optimizer mismatch")
+    shards = []
+    for name in manifest["shards"]:
+        spath = dirpath / name
+        if not spath.is_file():
+            raise CheckpointError(
+                f"{dirpath}: shard file {name} is missing — partial "
+                f"shard set ({len(manifest['shards'])} expected); "
+                "refusing to load garbage")
+        shards.append(np.load(spath))
+    try:
+        loaded = []
+        for li, (ref, d, rule) in enumerate(zip(leaves_like, desc,
+                                                rules)):
+            ref = np.asarray(ref)
+            if (tuple(d["shape"]) != ref.shape
+                    or np.dtype(d["dtype"]) != ref.dtype):
+                raise CheckpointError(
+                    f"{dirpath}:leaf_{li:05d} is {d['dtype']}"
+                    f"{list(d['shape'])}, expected {ref.dtype}"
+                    f"{list(ref.shape)}")
+            key = f"leaf_{li:05d}"
+            dims = [di for di, a in enumerate(rule) if a is not None]
+            if dims:
+                parts = []
+                for si, sh in enumerate(shards):
+                    if key not in sh.files:
+                        raise CheckpointError(
+                            f"{dirpath}:{manifest['shards'][si]} is "
+                            f"missing {key} — truncated shard file")
+                    parts.append(sh[key])
+                arr = np.concatenate(parts, axis=dims[0])
+            else:
+                if key not in shards[0].files:
+                    raise CheckpointError(
+                        f"{dirpath}:{manifest['shards'][0]} is "
+                        f"missing {key} — truncated shard file")
+                arr = shards[0][key]
+            if arr.shape != ref.shape or arr.dtype != ref.dtype:
+                raise CheckpointError(
+                    f"{dirpath}:{key} reassembles to {arr.dtype}"
+                    f"{list(arr.shape)}, expected {ref.dtype}"
+                    f"{list(ref.shape)} — axis rules do not match "
+                    "the stored blocks")
+            loaded.append(jax.numpy.asarray(arr))
+    finally:
+        for sh in shards:
+            sh.close()
+    return jax.tree_util.tree_unflatten(treedef, loaded)
+
+
 def restore(ckpt_dir, step: int, like):
     """Load the ``step`` checkpoint into the structure of ``like``.
 
@@ -107,7 +330,15 @@ def restore(ckpt_dir, step: int, like):
     (e.g. freshly initialized ``(params, opt_state)``).  Raises
     :class:`CheckpointError` if the file is missing or disagrees with
     ``like`` in leaf count, shape, or dtype.
+
+    Dispatches on layout: a sharded ``step_<n>/`` directory is
+    reassembled into global arrays (so the caller may re-shard onto
+    any mesh — restore is mesh-agnostic); otherwise the single-file
+    ``step_<n>.npz`` path runs.
     """
+    dirpath = _dir_path(ckpt_dir, step)
+    if dirpath.is_dir():
+        return _restore_sharded(dirpath, like)
     path = _path(ckpt_dir, step)
     if not path.exists():
         raise CheckpointError(f"no checkpoint at {path}")
@@ -136,8 +367,17 @@ def load_meta(ckpt_dir, step: int) -> dict:
     Returns ``{}`` for checkpoints written without metadata (including
     every pre-metadata checkpoint — old files stay restorable), and
     raises :class:`CheckpointError` when the checkpoint itself is
-    missing or its metadata is unreadable.
+    missing or its metadata is unreadable.  Sharded checkpoints carry
+    their metadata in the manifest.
     """
+    dirpath = _dir_path(ckpt_dir, step)
+    if dirpath.is_dir():
+        meta = _read_manifest(dirpath)["meta"]
+        if not isinstance(meta, dict):
+            raise CheckpointError(
+                f"{dirpath}/{_MANIFEST}: metadata record is "
+                f"{type(meta).__name__}, expected an object")
+        return meta
     path = _path(ckpt_dir, step)
     if not path.exists():
         raise CheckpointError(f"no checkpoint at {path}")

@@ -30,7 +30,7 @@ from repro.configs import get_config
 from repro.core import PrecisionPolicy, get_backend
 from repro.models import Model
 from repro.obs import get_logger
-from repro.shard import data_parallel_setup
+from repro.shard import train_mesh_setup
 from repro.train import AdamW, SyntheticText
 
 from .calibrate import Calibrator
@@ -143,9 +143,12 @@ def main(argv: Optional[Sequence[str]] = None) -> List[str]:
 
     mesh = batch_sharding = None
     if args.mesh:
-        mesh, batch_sharding, (params, opt_state) = \
-            data_parallel_setup(args.mesh, args.global_batch,
-                                (params, opt_state))
+        # Same 2-D bring-up as the train CLI, so a step plan is
+        # calibrated against exactly the per-shard extents (and tp
+        # psums) the training run will trace.
+        mesh, batch_sharding, (params, opt_state), _ = \
+            train_mesh_setup(args.mesh, args.global_batch, cfg,
+                             (params, opt_state))
 
     if args.target == "step":
         from repro.launch.train import (build_sharded_train_step,

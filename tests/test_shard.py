@@ -1,9 +1,12 @@
-"""Sharded execution: mesh helpers, shard_map/pmap offload, dp=N train.
+"""Sharded execution: meshes, shard_map/pmap offload, dp×tp train.
 
-The acceptance bar for the sharding work: a dp=8 data-parallel
-*emulated* train step on virtual CPU devices must match the
-single-device emulated step loss within 1e-10 over 4 steps, with the
-offloaded-site count unchanged (no silent native fallback).
+The acceptance bars for the sharding work, asserted directly below: a
+dp=8 data-parallel *emulated* train step on virtual CPU devices must
+match the single-device emulated step loss within 1e-10 over 4 steps
+with no silent native fallback, and a 2-D dp=4×tp=2 step (tensor
+parallelism over attention heads and the SwiGLU hidden dim, bucketed
+overlapped gradient all-reduce) must hold the same 1e-10 bar at f64
+and under full ``fp64_int8_9`` emulation.
 """
 
 import jax
@@ -19,8 +22,11 @@ from repro.launch.train import (build_sharded_train_step,
                                 build_train_step)
 from repro.models import Model
 from repro.serve.engine import Engine, Request
-from repro.shard import (build_mesh, data_parallel_sharding,
-                         parse_mesh_spec, replicate, shard_batch)
+from repro.shard import (build_mesh, bucket_stats, bucketed_psum,
+                         data_parallel_sharding, parse_mesh_spec,
+                         reduce_gradients, replicate, ring_all_reduce,
+                         shard_batch, train_mesh_setup)
+from repro.shard.collectives import bucket_indices
 from repro.train import AdamW, SyntheticText
 
 needs8 = pytest.mark.skipif(
@@ -32,6 +38,13 @@ needs8 = pytest.mark.skipif(
 F64 = LMConfig(name="shard_f64", vocab_size=128, num_layers=1,
                d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
                d_ff=128, dtype="float64", param_dtype="float64")
+
+# A tp-shardable f64 model for the 2-D tests: tp=2 must divide
+# num_heads, num_kv_heads and d_ff (F64 above has num_kv_heads=1, so
+# it can only run data-parallel).
+TP_F64 = LMConfig(name="tp_f64", vocab_size=128, num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                  d_ff=128, dtype="float64", param_dtype="float64")
 
 
 @pytest.fixture(scope="module")
@@ -82,6 +95,110 @@ class TestMeshHelpers:
             NamedSharding(mesh8, P()), 2)
         with pytest.raises(ValueError, match="divisible"):
             shard_batch(jnp.ones((9, 2)), mesh8)
+
+
+class TestTrainMeshSetup:
+    """The 2-D CLI bring-up: every spec error fails up front with a
+    CLI-grade message, and state lands per the LM axis rules."""
+
+    def test_unknown_axis_lists_valid_names(self):
+        with pytest.raises(SystemExit) as ei:
+            train_mesh_setup("pp=2", 4)
+        msg = str(ei.value)
+        assert "'dp'" in msg and "'tp'" in msg
+        assert "dp=4,tp=2" in msg  # the example spelling
+
+    def test_device_budget_checked_up_front(self):
+        n = jax.device_count()
+        with pytest.raises(SystemExit,
+                           match="xla_force_host_platform_device_count"):
+            train_mesh_setup(f"dp={n},tp=2", 2 * n, TP_F64)
+
+    @needs8
+    def test_batch_divides_dp_not_mesh_size(self):
+        # dp=4,tp=2 occupies 8 devices but only dp splits the batch:
+        # batch 4 is fine (4 % dp == 0) even though 4 % mesh.size != 0.
+        mesh, _, _, _ = train_mesh_setup("dp=4,tp=2", 4, TP_F64)
+        assert dict(mesh.shape) == {"dp": 4, "tp": 2}
+        with pytest.raises(SystemExit, match="dp=4"):
+            train_mesh_setup("dp=4,tp=2", 6, TP_F64)
+
+    @needs8
+    def test_mesh_is_canonicalized_dp_major(self):
+        mesh, _, _, _ = train_mesh_setup("tp=2,dp=4", 4, TP_F64)
+        assert mesh.axis_names == ("dp", "tp")
+
+    @needs8
+    def test_tp_must_divide_head_counts(self):
+        with pytest.raises(SystemExit, match="num_kv_heads"):
+            train_mesh_setup("dp=2,tp=4", 4, TP_F64)
+
+    @needs8
+    def test_state_placed_per_axis_rules(self):
+        model = Model(TP_F64)
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt_state = AdamW(lr=1e-3).init(params)
+        mesh, _, (p, o), (pspecs, _) = train_mesh_setup(
+            "dp=2,tp=2", 4, TP_F64, (params, opt_state))
+        wq = p["blocks"]["wq"]
+        assert wq.sharding.is_equivalent_to(
+            NamedSharding(mesh, P(None, None, "tp")), wq.ndim)
+        assert p["embed"].sharding.is_equivalent_to(
+            NamedSharding(mesh, P()), p["embed"].ndim)
+        # AdamW moments mirror the parameter layout leaf for leaf.
+        mu_down = o["mu"]["blocks"]["w_down"]
+        assert mu_down.sharding.is_equivalent_to(
+            NamedSharding(mesh, P(None, "tp", None)), mu_down.ndim)
+        assert pspecs["blocks"]["wo"] == P(None, "tp", None)
+
+
+class TestCollectives:
+    def test_bucket_indices_greedy_order_preserving(self):
+        leaves = [np.zeros(n, np.float64)
+                  for n in (100, 100, 300, 50)]
+        # 1600-byte buckets: [0,1] fills one exactly, the oversize
+        # leaf 2 gets its own (boundaries never split a leaf), 3 opens
+        # the next.
+        assert bucket_indices(leaves, 1600) == [[0, 1], [2], [3]]
+        n, sizes = bucket_stats(leaves, 1600)
+        assert n == 3 and sizes == [1600, 2400, 400]
+
+    @needs8
+    def test_bucketed_psum_matches_pmean_bitwise(self, mesh8):
+        rng = np.random.default_rng(5)
+        tree = {"a": jnp.asarray(rng.standard_normal((8, 16))),
+                "b": jnp.asarray(rng.standard_normal((8, 4)))}
+
+        def run(body):
+            return shard_map(body, mesh=mesh8, in_specs=(P("dp"),),
+                             out_specs=P(), check_rep=False)(tree)
+
+        got = run(lambda t: bucketed_psum(t, "dp",
+                                          bucket_bytes=1 << 20,
+                                          mean_size=8))
+        ref = run(lambda t: jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x, "dp"), t))
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @needs8
+    def test_ring_matches_psum_to_rounding(self, mesh8):
+        x = jnp.asarray(
+            np.random.default_rng(6).standard_normal((8, 32)))
+
+        def run(body):
+            return shard_map(body, mesh=mesh8, in_specs=(P("dp"),),
+                             out_specs=P(), check_rep=False)(x)
+
+        ref = run(lambda s: jax.lax.psum(s, "dp") / 8)
+        got = run(lambda s: ring_all_reduce(s, "dp", 8, mean=True))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-12)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="bucketed"):
+            reduce_gradients({"g": jnp.ones(3)}, "dp", 2, mode="avg")
 
 
 def _dp_matmul(mesh):
@@ -322,6 +439,101 @@ class TestDataParallelTrain:
         assert shard_names == [f"shmap0/{n}" for n in single_names]
 
 
+class Test2DTrain:
+    """dp=4 × tp=2 == single device: this PR's acceptance bar.
+
+    Tensor parallelism changes the *program* (per-shard matmul extents,
+    tp psums inside the shard_map body, replicated-param gradients
+    completed by the custom_vjp wrappers) but must not change the
+    *math*: over 4 steps the losses and the (reassembled) parameters
+    match the single-device run to 1e-10 — at f64, and under full
+    fp64_int8_9 emulation where the Ozaki truncation error sits below
+    f64 resolution.
+    """
+
+    def _setup(self):
+        model = Model(TP_F64)
+        opt = AdamW(lr=3e-3)
+        data = SyntheticText(TP_F64.vocab_size, 32, 8, seed=0)
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        return model, opt, data, params, opt_state
+
+    @needs8
+    @pytest.mark.parametrize("backend,atol,param_atol", [
+        ("", 1e-10, 1e-10),
+        ("fp64_int8_9", 1e-10, 1e-9),
+    ])
+    def test_dp4_tp2_matches_single_device(self, backend, atol,
+                                           param_atol):
+        model, opt, data, params, opt_state = self._setup()
+        single = build_train_step(model, opt)
+        mesh, bsh, (p2, o2), _ = train_mesh_setup(
+            "dp=4,tp=2", 8, TP_F64, (params, opt_state))
+        sharded = build_sharded_train_step(model, opt, mesh)
+
+        if backend:
+            pol = PrecisionPolicy(backend=backend, min_dim=32,
+                                  accumulator="f64")
+            single_w = offload(single, pol)
+            sharded_w = offload(sharded, pol)
+            batch0 = jnp.asarray(data.batch(0))
+            n1 = sum(s.offloaded for s in
+                     single_w.sites(params, opt_state, batch0))
+            sites2 = sharded_w.sites(p2, o2,
+                                     jax.device_put(batch0, bsh))
+            assert n1 > 0 and sum(s.offloaded for s in sites2) > 0
+            # Every site carries the mesh axes it runs under (the
+            # interceptor's spmd_axes), visible in the site report.
+            on = [s for s in sites2 if s.offloaded]
+            assert all(s.spmd == "dp=4,tp=2" for s in on)
+            assert all("[dp=4,tp=2]" in repr(s) for s in on)
+            single, sharded = single_w, sharded_w
+
+        loss1, params1 = _run_steps(jax.jit(single), params,
+                                    opt_state, data, 4)
+        loss2, params2 = _run_steps(jax.jit(sharded), p2, o2, data, 4,
+                                    bsh)
+        np.testing.assert_allclose(loss2, loss1, rtol=0, atol=atol)
+        for a, b in zip(jax.tree_util.tree_leaves(params1),
+                        jax.tree_util.tree_leaves(params2)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=0, atol=param_atol)
+
+    # The blocking reference reduces the same sums in the same order
+    # (one fused psum over all leaves vs per-bucket psums of the same
+    # leaf blocks), so it holds the strict bar; the ppermute ring
+    # accumulates in per-shard order and only promises rounding-level
+    # agreement.
+    @needs8
+    @pytest.mark.parametrize("mode,atol", [("blocking", 1e-10),
+                                           ("ppermute", 1e-9)])
+    def test_grad_reduce_modes_match(self, mode, atol):
+        model, opt, data, params, opt_state = self._setup()
+        single = build_train_step(model, opt)
+        mesh, bsh, (p2, o2), _ = train_mesh_setup(
+            "dp=4,tp=2", 8, TP_F64, (params, opt_state))
+        sharded = build_sharded_train_step(model, opt, mesh,
+                                           grad_reduce=mode)
+        loss1, _ = _run_steps(jax.jit(single), params, opt_state,
+                              data, 4)
+        loss2, _ = _run_steps(jax.jit(sharded), p2, o2, data, 4, bsh)
+        np.testing.assert_allclose(loss2, loss1, rtol=0, atol=atol)
+
+    @needs8
+    def test_tp_only_mesh(self):
+        # Degenerate dp=1: the whole batch on every tp shard.
+        model, opt, data, params, opt_state = self._setup()
+        single = build_train_step(model, opt)
+        mesh, bsh, (p2, o2), _ = train_mesh_setup(
+            "dp=1,tp=2", 8, TP_F64, (params, opt_state))
+        sharded = build_sharded_train_step(model, opt, mesh)
+        loss1, _ = _run_steps(jax.jit(single), params, opt_state,
+                              data, 2)
+        loss2, _ = _run_steps(jax.jit(sharded), p2, o2, data, 2, bsh)
+        np.testing.assert_allclose(loss2, loss1, rtol=0, atol=1e-10)
+
+
 class TestShardedServe:
     def _requests(self):
         rng = np.random.default_rng(42)
@@ -357,3 +569,32 @@ class TestShardedServe:
         eng.run(self._requests()[:8])
         assert eng.cache["k"].sharding.is_equivalent_to(
             NamedSharding(mesh8, P(None, "dp")), eng.cache["k"].ndim)
+
+    @needs8
+    def test_tp_engine_matches_single_device_tokens(self):
+        # 2-D serving goes through GSPMD (params device_put per the LM
+        # axis rules, XLA derives the tp collectives) rather than
+        # shard_map — the decoded tokens must not change.
+        model = Model(TP_F64)
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(43)
+        reqs = [Request(prompt=[int(t) for t in
+                                rng.integers(1, TP_F64.vocab_size,
+                                             int(n))],
+                        max_new_tokens=8)
+                for n in rng.integers(3, 20, 8)]
+        ref = Engine(model, params, batch_slots=8,
+                     max_len=64).run(reqs)
+        mesh = build_mesh("dp=4,tp=2")
+        eng = Engine(model, params, batch_slots=8, max_len=64,
+                     mesh=mesh)
+        got = eng.run(reqs)
+        assert [r.out for r in ref] == [g.out for g in got]
+        # Params landed tp-sharded, the KV cache splits its kv-head
+        # axis over tp and its slot axis over dp.
+        wq = eng.params["blocks"]["wq"]
+        assert wq.sharding.is_equivalent_to(
+            NamedSharding(mesh, P(None, None, "tp")), wq.ndim)
+        assert eng.cache["k"].sharding.is_equivalent_to(
+            NamedSharding(mesh, P(None, "dp", "tp")),
+            eng.cache["k"].ndim)

@@ -553,3 +553,41 @@ class TestShardedCalibration:
                    for n in sharded.result().site_names)
         assert {r.site for r in sharded.result().records} == \
             {r.site for r in single.result().records}
+
+    @needs8
+    def test_step_plan_is_mesh_specific_under_tp(self):
+        """The documented caveat, asserted: a ``--target step`` plan
+        calibrated single-device does NOT transfer to a tp mesh.
+
+        Tensor parallelism changes the per-shard contraction extents
+        (``d_ff/tp``, per-shard head counts), so the traced site set
+        disagrees with the plan fingerprint and plan-strict offload
+        raises :class:`PlanStaleError` instead of silently running a
+        split schedule tuned for different GEMM shapes.  Re-calibrate
+        with the same ``--mesh`` (the tune CLI goes through the
+        identical 2-D bring-up) to get a plan for the tp program.
+        """
+        from repro.launch.train import (build_sharded_train_step,
+                                        build_train_step)
+        from repro.shard import train_mesh_setup
+        from repro.train import AdamW
+
+        cfg = get_config("tiny")
+        model = Model(cfg)
+        opt = AdamW(lr=3e-3)
+        params = model.init_params(jax.random.PRNGKey(0))
+        state = opt.init(params)
+        batch = jnp.asarray(
+            SyntheticText(cfg.vocab_size, 64, 8, seed=0).batch(0))
+
+        pol = PrecisionPolicy(default_splits=6, min_dim=64)
+        cal = Calibrator(build_train_step(model, opt), pol)
+        cal.run(params, state, batch)
+        plan = solve_plan(cal.result())
+
+        mesh, bsh, (p2, o2), _ = train_mesh_setup(
+            "dp=4,tp=2", 8, cfg, (params, state))
+        sharded = build_sharded_train_step(model, opt, mesh)
+        with pytest.raises(PlanStaleError):
+            offload(sharded, plan=plan).sites(
+                p2, o2, jax.device_put(batch, bsh))
