@@ -503,11 +503,73 @@ def bench_tuned_plan(quick: bool) -> list:
     ]
 
 
+def bench_serve_trace(quick: bool) -> list:
+    """Deterministic many-user serve trace: paged vs dense replay.
+
+    The same fixed request trace (seeded ragged prompts, more users
+    than slots, per-request max_new) replayed through the paged and
+    the dense engine.  ``us_per_call`` is microseconds per *generated
+    token* — the gate ratios paged/dense, so the block-table layout
+    must sustain the rectangle's tokens/sec.  The paged row's deriveds
+    carry the allocation claim (``kv_blocks_hwm`` strictly under
+    ``dense_equivalent_blocks``, ``kv_blocks_saved`` >= 1), gated by
+    compare_baseline's derived checks.
+    """
+    from repro.configs import LMConfig
+    from repro.models import Model
+    from repro.serve import Engine, Request
+
+    cfg = LMConfig(name="bench_serve", vocab_size=128, num_layers=1,
+                   d_model=64, num_heads=2, num_kv_heads=1,
+                   head_dim=32, d_ff=128)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_users = 12 if quick else 32
+    rng = np.random.default_rng(2024)
+    trace = [([int(t) for t in rng.integers(1, cfg.vocab_size, n)],
+              int(m))
+             for n, m in zip(rng.integers(4, 40, n_users),
+                             rng.integers(4, 9, n_users))]
+
+    rows, out_tokens = [], {}
+    for layout in ("paged", "dense"):
+        eng = Engine(model, params, batch_slots=4, max_len=64,
+                     kv_layout=layout, block_size=16)
+        reqs = [Request(prompt=p, max_new_tokens=m) for p, m in trace]
+        # Warm the compile caches on a throwaway prefix, then time the
+        # full replay.
+        Engine(model, params, batch_slots=4, max_len=64,
+               kv_layout=layout, block_size=16).run(
+            [Request(prompt=p, max_new_tokens=m)
+             for p, m in trace[:4]])
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(r.out) for r in done)
+        out_tokens[layout] = [r.out for r in done]
+        us_per_tok = dt * 1e6 / max(n_tok, 1)
+        derived = (f"users={n_users};tokens={n_tok};"
+                   f"tokens_per_s={n_tok / dt:.1f}")
+        if layout == "paged":
+            st = eng.kv.stats()
+            saved = st["dense_equivalent_blocks"] - st["allocated_hwm"]
+            derived += (f";kv_blocks_hwm={st['allocated_hwm']};"
+                        f"dense_equivalent_blocks="
+                        f"{st['dense_equivalent_blocks']};"
+                        f"kv_blocks_saved={saved}")
+        rows.append(f"serve_trace_{layout},{us_per_tok:.0f},{derived}")
+    # The replay is only a fair perf comparison if both layouts emit
+    # the same tokens; disagreement voids the row.
+    identical = int(out_tokens["paged"] == out_tokens["dense"])
+    rows[0] += f";tokens_match_dense={identical}"
+    return rows
+
+
 BENCHES = [bench_gemm_accuracy, bench_gemm_throughput_model,
            bench_kernel_pallas, bench_kernel_v2, bench_intercept,
            bench_offload_batched,
            bench_offload_sharded, bench_train_2d,
-           bench_lm_step, bench_tuned_plan,
+           bench_lm_step, bench_tuned_plan, bench_serve_trace,
            bench_table1_must, bench_roofline]
 
 

@@ -7,6 +7,9 @@ the decode_32k/long_500k dry-run cells lower at 512 devices.
 
   PYTHONPATH=src python examples/serve_lm.py
   PYTHONPATH=src python examples/serve_lm.py --preset tiny
+  PYTHONPATH=src python examples/serve_lm.py --temperature 0.8 --seed 7
+  PYTHONPATH=src python examples/serve_lm.py --splits 6 \\
+      --warm-cache-dir /tmp/serve-cache   # 2nd run skips re-tracing
 """
 
 import argparse
@@ -27,9 +30,37 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=sorted(PRESETS), default="reduced")
     ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature "
+                         "(0 = greedy, the default)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed (temperature>0)")
+    ap.add_argument("--latency-target-s", type=float, default=None,
+                    help="per-request latency target; drives the edf "
+                         "scheduler and the latency-slack telemetry")
+    ap.add_argument("--scheduler-policy", choices=("fifo", "edf"),
+                    default="fifo")
+    ap.add_argument("--kv-layout", choices=("paged", "dense"),
+                    default="paged")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV cache block size in tokens")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="split prefills into pieces of at most this "
+                         "many tokens (default: whole prompt)")
+    ap.add_argument("--chunk-token-budget", type=int, default=None,
+                    help="pack prefill pieces from multiple requests "
+                         "into waves of at most this many tokens")
     ap.add_argument("--plan", default="",
                     help="precision-plan JSON: serve the prefill/"
                          "decode GEMMs under the tuned plan")
+    ap.add_argument("--splits", type=int, default=0,
+                    help="offload every GEMM at this split count "
+                         "(a plain PrecisionPolicy; no plan artifact "
+                         "needed — handy with --warm-cache-dir)")
+    ap.add_argument("--warm-cache-dir", default="",
+                    help="persist jaxpr-transform decisions/programs "
+                         "here so a restarted server warm-starts "
+                         "without re-tracing (needs --plan/--splits)")
     ap.add_argument("--ckpt-dir", default="",
                     help="override the per-preset checkpoint dir")
     ap.add_argument("--metrics-dir", default="",
@@ -61,6 +92,11 @@ def main():
         plan = PrecisionPlan.load(args.plan)
         print(f"[serve] precision plan {args.plan} "
               f"({plan.fingerprint}, {len(plan.sites)} sites)")
+    policy = None
+    if args.splits:
+        from repro.core import PrecisionPolicy
+
+        policy = PrecisionPolicy(default_splits=args.splits)
     metrics = None
     if args.metrics_dir != "none":
         from repro.obs import MetricsRun
@@ -68,12 +104,21 @@ def main():
         metrics = MetricsRun(args.metrics_dir
                              or f"{ckpt_dir}/metrics")
     engine = Engine(model, params, batch_slots=4, max_len=512,
-                    plan=plan, metrics=metrics)
+                    plan=plan, policy=policy, metrics=metrics,
+                    kv_layout=args.kv_layout,
+                    block_size=args.block_size,
+                    chunk_tokens=args.chunk_tokens,
+                    chunk_token_budget=args.chunk_token_budget,
+                    warm_cache_dir=args.warm_cache_dir or None,
+                    scheduler_policy=args.scheduler_policy)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=[int(t) for t in
                             rng.integers(1, cfg.vocab_size, 16)],
-                    max_new_tokens=args.max_new_tokens)
-            for _ in range(4)]
+                    max_new_tokens=args.max_new_tokens,
+                    temperature=args.temperature,
+                    seed=args.seed + i,
+                    latency_target_s=args.latency_target_s)
+            for i in range(4)]
     try:
         done = engine.run(reqs)
     finally:

@@ -12,8 +12,8 @@ Layers:
 
 from .backends import (GemmBackend, example_specs, get_backend,
                        register_backend, registered_families)
-from .intercept import (CacheInfo, Site, offload, site_report,
-                        transform_jaxpr)
+from .intercept import (CacheInfo, PersistInfo, Site, offload,
+                        site_report, transform_jaxpr)
 from .ozaki import (SLICE_BITS, num_pair_gemms, ozaki_matmul,
                     pair_indices, slice_matrix)
 from .precision import (AdaptiveGemm, PrecisionPolicy, SiteState,
@@ -38,6 +38,7 @@ __all__ = [
     "offload",
     "ozaki_matmul",
     "pair_indices",
+    "PersistInfo",
     "predict_splits",
     "register_backend",
     "registered_families",

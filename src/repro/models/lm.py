@@ -17,9 +17,18 @@ Three programs over one parameter pytree:
 * :meth:`Model.decode_step` — one greedy-decoding step against the
   cache (one token per slot, per-slot positions).
 
-The cache layout is ``(num_layers, batch, kv_heads, max_len, head_dim)``
-so the layer axis lines up with the stacked block parameters and both
-cache-touching programs are the same ``scan``.
+The *dense* cache layout is ``(num_layers, batch, kv_heads, max_len,
+head_dim)`` so the layer axis lines up with the stacked block
+parameters and both cache-touching programs are the same ``scan``.
+
+The *paged* cache layout (:meth:`Model.init_paged_cache` plus the
+``*_paged`` / ``prefill_chunk*`` programs) replaces the per-slot
+``max_len`` rectangle with a shared pool of fixed-size blocks
+``(num_layers, num_blocks, kv_heads, block_size, head_dim)`` addressed
+through a per-slot block table — slots only consume blocks they have
+actually written (see :mod:`repro.serve.kvcache` for the allocator).
+The gathered attention view is bit-identical to the dense buffer, so
+paged == dense is an exact equivalence, not an approximate one.
 
 No framework dependency (flax/optax are not in the container): params
 are plain dicts, initialization is explicit.
@@ -370,6 +379,152 @@ class Model:
         logits = self._head(params, x[:, 0, :])
         new_len = jnp.where(active, start + 1, start)
         return ({"k": k_new, "v": v_new, "length": new_len}, logits)
+
+    def prefill_chunk(self, params, k, v, tokens, start, piece_len):
+        """One chunk of a (possibly multi-wave) dense prefill.
+
+        k/v: gathered cache rows (L, rows, KV, max_len, d) for the
+        slots in this wave; tokens: (rows, W) chunk tokens right-padded
+        to the wave width; start: (rows,) absolute position of each
+        chunk's first token; piece_len: (rows,) true chunk lengths.
+        Returns the updated rows plus logits at each chunk's last real
+        token (only meaningful for chunks that complete their prompt).
+
+        Chunk padding is written at ``start + piece_len ..`` within the
+        slot's own rectangle and overwritten by the next chunk/decode
+        write before anything attends to it, exactly like the padded
+        tail of an unchunked prefill wave.
+        """
+        k_new, v_new, x = self._cached_forward(
+            params, {"k": k, "v": v}, tokens, start)
+        last = jnp.take_along_axis(
+            x, (piece_len - 1)[:, None, None].astype(jnp.int32), axis=1)
+        logits = self._head(params, last[:, 0, :])
+        return k_new, v_new, logits
+
+    # -- paged KV-cache programs (serving) ---------------------------
+
+    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+        """Empty K/V block pools for the paged cache layout.
+
+        The block table and per-slot lengths are owned by the allocator
+        (:class:`repro.serve.kvcache.PagedKVCache`), which assembles
+        the full cache dict around these pools.
+        """
+        cfg = self.cfg
+        shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads,
+                 block_size, cfg.head_dim)
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype)}
+
+    def _paged_forward(self, params, k_pool, v_pool, table, tokens,
+                       start, write_mask):
+        """Shared paged prefill/decode body (block-table indirection).
+
+        table: (B, nb + 1) int32 physical block ids; entry ``j`` maps
+        the slot's logical block ``j`` (positions ``j*bs .. j*bs+bs-1``)
+        into the pool, and the *trailing column* is the slot's trash
+        block — writes of padded / inactive positions are routed there
+        instead of at a real block, so chunk padding and masked decode
+        writes can never corrupt another slot's cache.  write_mask:
+        (B, T) bool, True where the token is real.
+
+        The per-slot view gathered for attention is laid out exactly
+        like the dense buffer's ``(B, S, KV, d)`` with
+        ``S = nb * block_size``: every unmasked position holds the same
+        written value, every masked position is squashed to the same
+        ``_MASK_VALUE`` score and an exactly-zero attention weight —
+        which is what makes paged == dense *bitwise*, not just close.
+        """
+        cfg = self.cfg
+        B, T = tokens.shape
+        nb = table.shape[1] - 1
+        bs = k_pool.shape[3]
+        S = nb * bs
+        x = params["embed"][tokens].astype(self.dtype)
+        positions = start[:, None] + jnp.arange(T)          # (B, T)
+        key_pos = jnp.arange(S)
+        mask = key_pos[None, None, :] <= positions[:, :, None]
+
+        # Destination of each new token: logical block + offset, mapped
+        # through the table; padded tokens index the trash column.
+        col = jnp.where(write_mask, positions // bs, nb)
+        phys = jnp.take_along_axis(table, col, axis=1)      # (B, T)
+        flat_phys = phys.reshape(-1)
+        flat_off = (positions % bs).reshape(-1)
+        attend = table[:, :nb]                              # (B, nb)
+
+        def write(pool, new):
+            # pool: (NB, KV, bs, d); new: (B, T, KV, d).  The advanced
+            # indices at dims 0/2 broadcast to the front, so updates
+            # are (B*T, KV, d).  Trash-block collisions are fine: that
+            # block is only ever read under the mask.
+            return pool.at[flat_phys, :, flat_off, :].set(
+                new.reshape(B * T, new.shape[2], new.shape[3]))
+
+        def gather(pool):
+            # (B, nb, KV, bs, d) -> the dense buffer's (B, KV, S, d),
+            # then the dense path's own moveaxis.  Going through the
+            # buffer layout is load-bearing for bitwise paged == dense:
+            # feeding the attention einsum a differently-laid-out (but
+            # value-identical) operand changes the GEMM's accumulation
+            # order on CPU by ~1 ulp.
+            buf = pool[attend].transpose(0, 2, 1, 3, 4).reshape(
+                B, -1, S, cfg.head_dim)
+            return jnp.moveaxis(buf, 1, 2)                  # (B, S, KV, d)
+
+        def block(x, layer):
+            lp, kp, vp = layer
+            q, k, v = self._qkv(lp, x, positions)
+            kp = write(kp, k)
+            vp = write(vp, v)
+            k_all = gather(kp)
+            v_all = gather(vp)
+            H = q.shape[2]
+            o = _sdpa(q, self._repeat_kv(k_all, H),
+                      self._repeat_kv(v_all, H), mask)
+            x = self._attn_out(lp, x, o)
+            x = self._mlp(lp, x)
+            return x, (kp, vp)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (params["blocks"], k_pool, v_pool))
+        return k_new, v_new, x
+
+    def prefill_chunk_paged(self, params, k, v, table, tokens, start,
+                            piece_len):
+        """Paged analogue of :meth:`prefill_chunk` over the block pools.
+
+        k/v are the *whole* pools (every wave writes through the block
+        table, no gather/scatter of rows); table holds the wave rows'
+        block-table entries (incl. the trash column).
+        """
+        T = tokens.shape[1]
+        write_mask = jnp.arange(T)[None, :] < piece_len[:, None]
+        k_new, v_new, x = self._paged_forward(
+            params, k, v, table, tokens, start, write_mask)
+        last = jnp.take_along_axis(
+            x, (piece_len - 1)[:, None, None].astype(jnp.int32), axis=1)
+        logits = self._head(params, last[:, 0, :])
+        return k_new, v_new, logits
+
+    def decode_step_paged(self, params, cache, tokens, active):
+        """One decoding step against the paged cache.
+
+        Same contract as :meth:`decode_step`; inactive slots' writes
+        are routed to their trash block (the dense path writes them at
+        the stale length instead), and the length bump is gated the
+        same way.
+        """
+        start = cache["length"]
+        k_new, v_new, x = self._paged_forward(
+            params, cache["k"], cache["v"], cache["block_table"],
+            tokens[:, None], start, active[:, None])
+        logits = self._head(params, x[:, 0, :])
+        new_len = jnp.where(active, start + 1, start)
+        return ({"k": k_new, "v": v_new,
+                 "block_table": cache["block_table"],
+                 "length": new_len}, logits)
 
     def greedy(self, logits) -> jax.Array:
         """Greedy token choice (B, vocab) -> (B,) int32."""

@@ -78,8 +78,37 @@ def _site_exec_counts(grouped) -> Dict[str, float]:
     return counts
 
 
+def _cache_event_counts(grouped) -> Dict[str, float]:
+    """Transform-cache resolutions by kind (``miss`` / ``disk_hit`` /
+    ``disk_decisions_hit``): registry snapshot if the run closed
+    cleanly, else the raw ``transform_cache`` event stream."""
+    counts: Dict[str, float] = {}
+    for ev in grouped.get("metric", ()):
+        if (ev.get("kind") == "counter"
+                and ev.get("name") == "transform_cache"):
+            kind = (ev.get("labels") or {}).get("result", "?")
+            counts[kind] = counts.get(kind, 0) + float(
+                ev.get("value", 0))
+    if not counts:
+        for ev in grouped.get("transform_cache", ()):
+            kind = ev.get("result", "?")
+            counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+def _last_gauges(grouped, names) -> Dict[str, float]:
+    """Final value of each named gauge (metric events are snapshots in
+    write order, so the last one wins)."""
+    vals: Dict[str, float] = {}
+    for ev in grouped.get("metric", ()):
+        if ev.get("kind") == "gauge" and ev.get("name") in names:
+            vals[ev["name"]] = float(ev.get("value", 0))
+    return vals
+
+
 def _report_run(run_id: str, events: List[dict], out,
-                check: bool = False) -> int:
+                check: bool = False,
+                expect_cache_hit: bool = False) -> int:
     grouped = _by_type(events)
     failures = 0
     print(f"run {run_id}: {len(events)} events", file=out)
@@ -142,6 +171,22 @@ def _report_run(run_id: str, events: List[dict], out,
                  checks[-1].get("budget"),
                  sum(1 for c in checks if c.get("drift"))]], out)
 
+    cache_counts = _cache_event_counts(grouped)
+    if cache_counts or expect_cache_hit:
+        if cache_counts:
+            print("transform cache:", file=out)
+            _table(["result", "count"],
+                   [[k, v] for k, v in sorted(cache_counts.items())],
+                   out)
+        warm = (cache_counts.get("disk_hit", 0)
+                + cache_counts.get("disk_decisions_hit", 0))
+        if expect_cache_hit and warm < 1:
+            print("CHECK FAIL: --expect-cache-hit but the run "
+                  "recorded no disk_hit/disk_decisions_hit transform-"
+                  "cache resolutions (cold trace, or warm_cache_dir "
+                  "not set?)", file=out)
+            failures += 1
+
     reqs = grouped.get("request", [])
     if reqs:
         def mean(key):
@@ -154,6 +199,18 @@ def _report_run(run_id: str, events: List[dict], out,
                [[len(reqs), mean("admission_wait_s"),
                  mean("prefill_s"), mean("ttft_s"),
                  mean("tokens_per_s")]], out)
+        kv = _last_gauges(grouped, ("serve_kv_blocks_allocated",
+                                    "serve_kv_blocks_hwm",
+                                    "serve_kv_block_utilization",
+                                    "serve_queue_depth"))
+        if kv:
+            print("serve kv/queue:", file=out)
+            _table(["blocks_allocated", "blocks_hwm",
+                    "block_utilization", "queue_depth"],
+                   [[kv.get("serve_kv_blocks_allocated"),
+                     kv.get("serve_kv_blocks_hwm"),
+                     kv.get("serve_kv_block_utilization"),
+                     kv.get("serve_queue_depth")]], out)
 
     rows = grouped.get("bench_row", [])
     if rows:
@@ -216,6 +273,10 @@ def main(argv=None, out=None) -> int:
     rep.add_argument("--check", action="store_true",
                      help="exit nonzero unless every offloaded site "
                      "recorded at least one execution")
+    rep.add_argument("--expect-cache-hit", action="store_true",
+                     help="exit nonzero unless the run resolved at "
+                     "least one transform-cache entry from the "
+                     "persistent on-disk cache (warm start)")
 
     exp = sub.add_parser("export", help="write a Chrome trace from "
                          "the run's span events")
@@ -235,8 +296,9 @@ def main(argv=None, out=None) -> int:
         for i, (run_id, events) in enumerate(sorted(runs.items())):
             if i:
                 print("", file=out)
-            failures += _report_run(run_id, events, out,
-                                    check=args.check)
+            failures += _report_run(
+                run_id, events, out, check=args.check,
+                expect_cache_hit=args.expect_cache_hit)
         return 1 if failures else 0
 
     events = [ev for _, evs in sorted(runs.items()) for ev in evs]

@@ -1,5 +1,20 @@
-"""repro.serve — continuous-batching inference on the KV-cache programs."""
+"""repro.serve — layered continuous-batching inference.
 
-from .engine import Engine, Request
+Layers (each importable on its own):
 
-__all__ = ["Engine", "Request"]
+- :mod:`repro.serve.scheduler` — admission queue, request validation,
+  slot assignment (FIFO / EDF).
+- :mod:`repro.serve.kvcache` — KV layout managers: paged block tables
+  over a shared pool, or the dense per-slot rectangle.
+- :mod:`repro.serve.runner` — device execution: packed chunked-prefill
+  waves interleaved with masked decode ticks.
+- :mod:`repro.serve.engine` — the facade tying them together behind
+  the original ``Engine.run(requests)`` API.
+"""
+
+from .engine import Engine
+from .kvcache import DenseKVCache, PagedKVCache
+from .scheduler import Request, SamplingParamError, Scheduler
+
+__all__ = ["Engine", "Request", "SamplingParamError", "Scheduler",
+           "PagedKVCache", "DenseKVCache"]

@@ -1,94 +1,75 @@
-"""Continuous-batching inference engine over the KV-cache programs.
+"""Continuous-batching inference engine (facade over the serve layers).
 
-The engine owns a fixed number of *slots* (the batch axis of one shared
-KV cache).  Requests queue for a free slot; newly admitted requests are
-prefilled together as one right-padded sub-batch and scattered into the
-shared cache; every engine tick then runs a single batched greedy
-``decode_step`` across all slots (idle slots are masked); finished
-requests are evicted and their slots immediately readmit queued work —
-so the decode batch stays as full as the workload allows, which is the
-whole point of continuous batching.
+The engine wires four single-purpose layers together and drives the
+serve loop; each layer is independently testable and none reaches into
+another's state:
+
+- :class:`repro.serve.scheduler.Scheduler` — request validation,
+  queueing, slot assignment (FIFO default, optional EDF).
+- :class:`repro.serve.kvcache.PagedKVCache` /
+  :class:`~repro.serve.kvcache.DenseKVCache` — cache layout and block
+  allocation, behind one manager API.
+- :class:`repro.serve.runner.Runner` — the device programs: packed
+  chunked-prefill waves interleaved with masked decode ticks.
+- this facade — slot lifecycle, per-request telemetry, the public
+  ``run()`` API (unchanged from the monolithic engine it replaced, and
+  token-identical to it for greedy requests).
 
 Numerics note: each slot's computation is independent of its batch
 neighbours (attention is masked per slot, matmuls are batched but not
 mixed), so a prompt decoded in a busy batch yields the same greedy
 tokens as the same prompt decoded alone — the serve tests assert this.
+The paged layout is additionally bit-identical to the dense rectangle
+(its attention gathers reproduce the dense buffer layout exactly), so
+the default ``kv_layout="paged"`` changes allocation, not tokens.
 
 Tunable-precision serving: pass ``plan=`` (a
 :class:`repro.tune.PrecisionPlan`) or ``policy=`` to run the prefill
 and decode GEMMs through the automatic offload transform — the same
 plan artifact the training loop consumes, applied in subset mode
-because serving traces only the forward sites.
+because serving traces only the forward sites.  Add
+``warm_cache_dir=`` to persist the transform cache across process
+restarts (see :func:`repro.core.intercept.offload`).
 
 Multi-device serving: pass ``mesh=`` to shard the engine across the
 slot (batch) axis — parameters replicated, the KV cache and every
 prefill/decode batch partitioned over the data-parallel axis, so each
-dp group owns ``batch_slots / dp`` slots.  Prefill waves are
-right-padded to a multiple of the dp extent so the sub-batch always
-divides evenly.  Per-slot independence (above) makes the sharded
-engine emit exactly the tokens the single-device engine would.
-
-A 2-D ``dp×tp`` mesh additionally shards the *parameters* for
-prefill/decode per the LM axis rules (:mod:`repro.shard.rules`):
-attention heads and the SwiGLU hidden dim split over ``tp``, the KV
-cache split over ``tp`` on its kv-head axis — XLA's SPMD partitioner
-inserts the tp collectives from the sharding annotations, so each
-device holds ``1/tp`` of every projection and ``1/(dp*tp)`` of the
-KV cache.
+dp group owns ``batch_slots / dp`` slots.  A 2-D ``dp×tp`` mesh
+additionally shards the *parameters* per the LM axis rules
+(:mod:`repro.shard.rules`) and the KV cache (dense rectangle or paged
+pool alike) over ``tp`` on its kv-head axis.  The paged pool's block
+axis is partitioned over dp — each dp group owns a contiguous block
+range, including its own trash block, so allocation never crosses
+shards.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
 from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core import PrecisionPolicy, offload
+from repro.core import PrecisionPolicy
 from repro.models import Model
 from repro.obs import get_logger
+from repro.serve.kvcache import DenseKVCache, PagedKVCache
+from repro.serve.runner import Runner
+from repro.serve.scheduler import (Request, SamplingParamError,
+                                   Scheduler)
 from repro.shard import (TP_AXIS, data_parallel_sharding,
                          lm_param_specs, state_shardings, validate_tp)
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "SamplingParamError"]
 
 log = get_logger("serve")
 
 
-@dataclasses.dataclass
-class Request:
-    """One generation request; ``out`` fills as the engine decodes."""
-
-    prompt: List[int]
-    max_new_tokens: int = 16
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-def _round_up(n: int, mult: int = 8) -> int:
-    return ((n + mult - 1) // mult) * mult
-
-
-class _NullSpan:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        return False
-
-
-#: Shared no-op context for the metrics-off path (contextlib.
-#: nullcontext allocates per use; the engine ticks in a hot loop).
-_NULL_SPAN = _NullSpan()
-
-
 class Engine:
-    """Greedy continuous-batching engine.
+    """Continuous-batching engine (greedy by default, per-request
+    temperature sampling on top).
 
     Args:
       model: the :class:`~repro.models.Model` (its config fixes the
@@ -104,33 +85,60 @@ class Engine:
         rules (``tp`` must divide ``num_kv_heads``).
       plan: optional :class:`repro.tune.PrecisionPlan` loaded at
         startup — the prefill and decode programs run through the
-        automatic offload transform under the plan's policy.  Plans
-        are usually calibrated on the *training* step, which covers a
-        superset of the serve sites (the backward sites never appear
-        here), so the plan is applied in subset mode: matching
-        canonical sites get their tuned split counts, everything else
-        keeps the plan's defaults, and no staleness error is raised
-        for the training-only entries.
+        automatic offload transform under the plan's policy, in subset
+        mode (train-calibrated plans carry backward-pass sites that
+        never appear here).
       policy: optional :class:`~repro.core.PrecisionPolicy` — same
         effect, explicit policy instead of a plan artifact (wins over
         ``plan`` for the transform configuration if both are given).
       metrics: optional :class:`repro.obs.MetricsRun` — per-request
-        latency telemetry (admission wait, prefill time, time to first
-        token, decode throughput), slot-occupancy gauges, prefill/
-        decode tracer spans, and (under a plan/policy) per-site GEMM
-        execution counts, all streamed into the run's JSONL file.
+        latency telemetry, queue-depth / block-utilization gauges,
+        prefill/decode tracer spans, and (under a plan/policy) per-site
+        GEMM execution counts, all streamed into the run's JSONL file.
+      kv_layout: ``"paged"`` (default) or ``"dense"``.  Paged carves
+        the cache into ``block_size``-token blocks allocated on demand
+        through a per-slot block table; dense keeps the original
+        per-slot ``max_len`` rectangle.  Both emit identical tokens.
+      block_size: paged block granularity; ``max_len`` must divide by
+        it.
+      num_blocks: paged pool size in usable blocks (default: the dense
+        equivalent, so admission never waits on blocks).  Smaller pools
+        oversubscribe slots; admission then reserves worst-case growth
+        so decoding requests cannot deadlock.
+      chunk_tokens: prefill chunk length.  ``None`` (default) ingests
+        each prompt in one piece (the pre-refactor behavior); set to
+        e.g. 64 to interleave decode ticks into long-prompt ingestion.
+      chunk_token_budget: cap on total real tokens per prefill wave
+        (packing budget); ``None`` = unlimited.
+      warm_cache_dir: directory for the persistent jaxpr-transform
+        cache.  A restarted engine pointed at the same directory
+        reuses the prior process's transform decisions (and compiled
+        programs where exportable) without re-tracing.  Single-device,
+        policy/plan runs only.
+      scheduler_policy: ``"fifo"`` (default, the pre-refactor order)
+        or ``"edf"`` (earliest ``t_enqueue + latency_target_s`` first).
     """
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 512, mesh=None, plan=None,
                  policy: Optional[PrecisionPolicy] = None,
-                 metrics=None):
+                 metrics=None, *, kv_layout: str = "paged",
+                 block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
+                 chunk_token_budget: Optional[int] = None,
+                 warm_cache_dir=None,
+                 scheduler_policy: str = "fifo"):
+        if kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             "have ('paged', 'dense')")
         self.model = model
         self.metrics = metrics
         self.batch_slots = int(batch_slots)
         self.max_len = int(max_len)
         self.mesh = mesh
         self._dp_size = 1
+        slot_sharding = kv_sharding = None
         if mesh is not None:
             shape = dict(mesh.shape)
             tp = shape.get(TP_AXIS, 1)
@@ -142,33 +150,27 @@ class Engine:
                     f"batch_slots={self.batch_slots} is not divisible "
                     f"by the data-parallel extent {dp_axis}="
                     f"{self._dp_size}")
-            # The canonical placements come from repro.shard; only
-            # the KV layout (slots on dim 1 of (layers, batch, ...))
-            # is serve-specific.
+            # The canonical placements come from repro.shard; only the
+            # KV layout is serve-specific, and the paged pool reuses
+            # the dense spec: dim 1 is blocks instead of slots (the
+            # per-dp-group block ranges keep it evenly divisible) and
+            # dim 2 is still kv-heads for tp.
             if tp > 1:
-                # 2-D: parameters tp-sharded per the LM axis rules,
-                # KV cache additionally split over tp on its kv-head
-                # axis (dim 2); XLA's SPMD partitioner derives the tp
-                # collectives from these annotations.
                 validate_tp(model.cfg, tp)
                 params = jax.device_put(
                     params,
                     state_shardings(mesh, lm_param_specs(model.cfg)))
-                self._slot_sharding = NamedSharding(
+                slot_sharding = NamedSharding(
                     mesh, PartitionSpec(dp_axis))
-                self._kv_sharding = NamedSharding(
+                kv_sharding = NamedSharding(
                     mesh, PartitionSpec(None, dp_axis, TP_AXIS))
             else:
-                replicated, self._slot_sharding = \
+                replicated, slot_sharding = \
                     data_parallel_sharding(mesh, dp_axis)
-                self._kv_sharding = NamedSharding(
+                kv_sharding = NamedSharding(
                     mesh, PartitionSpec(None, dp_axis))
                 params = jax.device_put(params, replicated)
         self.params = params
-        self.cache = self._pin(
-            model.init_cache(self.batch_slots, self.max_len))
-        self.slots: List[Optional[Request]] = [None] * self.batch_slots
-        self._next_token = np.zeros(self.batch_slots, np.int32)
         if policy is None and plan is not None:
             # Unmatched-site handling must be silent: a train-
             # calibrated plan legitimately carries backward-pass
@@ -178,140 +180,129 @@ class Engine:
         self.plan = plan
         self.policy = policy
 
+        registry = metrics.registry if metrics is not None else None
+        if kv_layout == "paged":
+            self.kv = PagedKVCache(
+                model, self.batch_slots, self.max_len,
+                block_size=block_size, num_blocks=num_blocks,
+                dp_groups=self._dp_size, registry=registry)
+        else:
+            self.kv = DenseKVCache(model, self.batch_slots,
+                                   self.max_len, registry=registry)
+        self.runner = Runner(
+            model, params, self.kv, max_len=self.max_len, mesh=mesh,
+            dp_size=self._dp_size, slot_sharding=slot_sharding,
+            kv_sharding=kv_sharding, policy=policy, plan=plan,
+            metrics=metrics, chunk_tokens=chunk_tokens,
+            chunk_token_budget=chunk_token_budget,
+            warm_cache_dir=warm_cache_dir)
+        self.scheduler = Scheduler(self.max_len,
+                                   policy=scheduler_policy,
+                                   metrics=metrics)
+        self.slots: List[Optional[Request]] = [None] * self.batch_slots
+        self._next_token = np.zeros(self.batch_slots, np.int32)
         # Per-request latency bookkeeping, keyed by request identity
         # (Request is a plain mutable dataclass, not hashable by value).
         self._rstats: dict = {}
-        self._sites_declared = False
 
-        def _maybe_offload(fn):
-            if policy is None:
-                return fn
-            hook = (metrics.site_event_handler()
-                    if metrics is not None else None)
-            return offload(fn, policy, plan=plan, plan_match="subset",
-                           on_site_event=hook)
+    # -- introspection -----------------------------------------------
 
-        # One compile per (admitted sub-batch size, padded prompt
-        # length) pair; decode compiles once.  Fine at example scale —
-        # pad admission waves to batch_slots if this ever dominates.
-        # The pre-jit wrappers stay inspectable (``.sites(...)`` when
-        # a policy/plan is active).
-        self._prefill_fn = _maybe_offload(
-            lambda p, t, n: model.prefill(p, t, n, self.max_len))
-        self._decode_fn = _maybe_offload(model.decode_step)
-        self._prefill = jax.jit(self._prefill_fn)
-        self._decode = jax.jit(self._decode_fn)
+    @property
+    def cache(self) -> dict:
+        """The live KV-cache pytree (owned by the runner)."""
+        return self.runner.cache
 
-    def _pin(self, cache: dict) -> dict:
-        """Re-assert the slot-axis sharding on a cache pytree.
-
-        No-op without a mesh (and a no-copy no-op when the layout
-        already matches); after a host-side scatter or a decode step
-        this keeps the cache partitioned slot-wise instead of drifting
-        to whatever layout the last op produced.
-        """
-        if self.mesh is None:
-            return cache
-        return {"k": jax.device_put(cache["k"], self._kv_sharding),
-                "v": jax.device_put(cache["v"], self._kv_sharding),
-                "length": jax.device_put(cache["length"],
-                                         self._slot_sharding)}
+    def prefill_sites(self, rows: int, width: int):
+        """Site decisions of the prefill program for a wave of shape
+        ``(rows, width)`` — what the offload transform would do, without
+        executing anything.  Empty without a policy/plan."""
+        return self.runner.sites_for(rows, width)
 
     # -- lifecycle ---------------------------------------------------
 
-    def _admit(self, queue: "deque[Request]") -> None:
+    def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
-        batch = []
-        while free and queue:
-            req = queue.popleft()
-            if not req.prompt:
-                raise ValueError("empty prompt")
-            if req.max_new_tokens < 1:
-                raise ValueError("max_new_tokens must be >= 1 "
-                                 "(the engine always decodes the "
-                                 "prompt's continuation)")
-            if len(req.prompt) + req.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"prompt({len(req.prompt)}) + max_new_tokens"
-                    f"({req.max_new_tokens}) exceeds max_len="
-                    f"{self.max_len}")
-            batch.append((free.pop(0), req))
-        if not batch:
+        if not free or not self.scheduler.pending:
             return
-        idx = np.array([i for i, _ in batch])
-        lengths = np.array([len(r.prompt) for _, r in batch], np.int32)
-        P = min(_round_up(int(lengths.max())), self.max_len)
-        # With a mesh the wave is right-padded (dummy rows: empty
-        # prompt, length 1) to a multiple of the dp extent so the
-        # prefill batch shards evenly; dummy rows are dropped before
-        # the scatter.
-        rows = (len(batch) if self.mesh is None
-                else _round_up(len(batch), self._dp_size))
-        tokens = np.zeros((rows, P), np.int32)
-        for row, (_, req) in enumerate(batch):
-            tokens[row, :len(req.prompt)] = req.prompt
-        lengths = np.concatenate(
-            [lengths, np.ones(rows - len(batch), np.int32)])
-        tokens, lengths = jnp.asarray(tokens), jnp.asarray(lengths)
-        if self.mesh is not None:
-            tokens = jax.device_put(tokens, self._slot_sharding)
-            lengths = jax.device_put(lengths, self._slot_sharding)
-        if (self.metrics is not None and self.policy is not None
-                and not self._sites_declared):
-            # First prefill: record the site decisions (same records
-            # ``site_report`` would produce) so ``repro.obs report
-            # --check`` can hold execution counts against them.  Warms
-            # the same transform-cache entry the call below hits.
-            self.metrics.declare_sites(
-                self._prefill_fn.sites(self.params, tokens, lengths))
-            self._sites_declared = True
-        t_admit = time.perf_counter()
-        span = (self.metrics.tracer.span("prefill", rows=rows,
-                                         padded_len=P)
-                if self.metrics is not None else _NULL_SPAN)
-        with span:
-            sub_cache, last_logits = self._prefill(self.params, tokens,
-                                                   lengths)
-            # Scatter the real sub-batch rows into the shared slots.
-            jidx = jnp.asarray(idx)
-            n = len(batch)
-            self.cache = self._pin({
-                "k": self.cache["k"].at[:, jidx].set(
-                    sub_cache["k"][:, :n]),
-                "v": self.cache["v"].at[:, jidx].set(
-                    sub_cache["v"][:, :n]),
-                "length": self.cache["length"].at[jidx].set(
-                    sub_cache["length"][:n]),
-            })
-            # np.asarray blocks on the device work, so the span (and
-            # prefill_s) covers the whole prefill, not the dispatch.
-            first = np.asarray(self.model.greedy(last_logits))
-        prefill_s = time.perf_counter() - t_admit
+        placed = self.scheduler.admit(
+            free, lambda slot, req: self.kv.can_reserve(
+                slot, len(req.prompt), req.max_new_tokens))
+        if not placed and not any(r is not None for r in self.slots):
+            # Idle engine, head of queue still unplaceable: its worst
+            # case exceeds what an *empty* pool can book — waiting
+            # cannot fix that.
+            raise RuntimeError(
+                "request can never be admitted: its worst-case cache "
+                f"(prompt + max_new_tokens) outgrows the configured "
+                f"pool ({self.kv.stats()}) — raise num_blocks")
+        for slot, req in placed:
+            self.kv.reserve(slot, len(req.prompt), req.max_new_tokens)
+            self.slots[slot] = req
+            self.runner.enqueue_prefill(slot, req)
+
+    def _prefill_tick(self) -> None:
+        res = self.runner.prefill_wave()
+        if res is None:
+            return
         if self.metrics is not None:
-            log.debug(f"admitted wave of {len(batch)} "
-                      f"(padded {rows}x{P}) in {prefill_s * 1e3:.1f} ms")
-        for row, (slot, req) in enumerate(batch):
+            log.debug(f"prefill wave: {len(res.pieces)} chunks, "
+                      f"{res.real_tokens} tokens "
+                      f"(padded {res.rows}x{res.width}) in "
+                      f"{res.duration_s * 1e3:.1f} ms")
+            t_wave = time.perf_counter() - res.duration_s
+            for _, req, _ in res.pieces:
+                st = self._rstats.get(id(req))
+                if st is None:
+                    continue
+                if "t_admit" not in st:
+                    # First chunk of this request to reach a device.
+                    st["t_admit"] = t_wave
+                    st["admission_wait_s"] = t_wave - st["t_enqueue"]
+                    self.metrics.registry.histogram(
+                        "serve_admission_wait_s").observe(
+                        st["admission_wait_s"])
+                st["prefill_s"] = (st.get("prefill_s", 0.0)
+                                   + res.duration_s)
+        for slot, req, token in res.completed:
             st = self._rstats.get(id(req))
             if st is not None:
-                st["admission_wait_s"] = t_admit - st["t_enqueue"]
-                st["prefill_s"] = prefill_s
-                st["t_admit"] = t_admit
                 self.metrics.registry.histogram(
-                    "serve_admission_wait_s").observe(
-                    st["admission_wait_s"])
-                self.metrics.registry.histogram(
-                    "serve_prefill_s").observe(prefill_s)
-            self.slots[slot] = req
-            self._emit(slot, req, int(first[row]))
+                    "serve_prefill_s").observe(st["prefill_s"])
+            self._emit(slot, req, token)
+
+    def _decode_tick(self) -> None:
+        active = np.array([
+            req is not None and not self.runner.is_prefilling(slot)
+            for slot, req in enumerate(self.slots)])
+        if not active.any():
+            return
+        if self.metrics is not None:
+            self.metrics.registry.gauge("serve_slot_occupancy").set(
+                int(active.sum()))
+            for slot in np.flatnonzero(active):
+                st = self._rstats.get(id(self.slots[slot]))
+                if st is not None:
+                    st["decode_ticks"] = st.get("decode_ticks", 0) + 1
+        nxt = self.runner.decode_tick(self._next_token, active,
+                                      self.slots)
+        for slot in np.flatnonzero(active):
+            self._emit(int(slot), self.slots[slot], int(nxt[slot]))
 
     def _emit(self, slot: int, req: Request, token: int) -> None:
         req.out.append(token)
         st = self._rstats.get(id(req))
         if st is not None and "ttft_s" not in st:
-            # First emitted token (from the prefill's last logits).
+            # First emitted token (from the final prefill chunk).
             st["ttft_s"] = time.perf_counter() - st["t_enqueue"]
             self.metrics.registry.histogram(
                 "serve_ttft_s").observe(st["ttft_s"])
+            if req.latency_target_s is not None:
+                slack = req.latency_target_s - st["ttft_s"]
+                self.metrics.registry.histogram(
+                    "serve_latency_slack_s").observe(slack)
+                if slack < 0:
+                    self.metrics.registry.counter(
+                        "serve_latency_miss").inc()
         self._next_token[slot] = token
         eos = self.model.cfg.eos_id
         length_next = len(req.prompt) + len(req.out)
@@ -320,6 +311,8 @@ class Engine:
                 or length_next >= self.max_len):
             req.done = True
             self.slots[slot] = None
+            self.kv.release(slot)
+            self.scheduler.forget(req)
             if st is not None:
                 self._finish(req, st)
 
@@ -335,63 +328,34 @@ class Engine:
             admission_wait_s=st.get("admission_wait_s"),
             prefill_s=st.get("prefill_s"), ttft_s=st.get("ttft_s"),
             decode_ticks=st.get("decode_ticks", 0),
-            tokens_per_s=tokens_per_s)
+            tokens_per_s=tokens_per_s,
+            latency_target_s=req.latency_target_s)
         log.debug(f"request done: {len(req.prompt)} prompt + "
                   f"{len(req.out)} new tokens, "
                   f"ttft {st.get('ttft_s', 0) * 1e3:.1f} ms, "
                   f"{tokens_per_s:.1f} tok/s")
         self._rstats.pop(id(req), None)
 
-    def _tick(self) -> None:
-        active = np.array([r is not None for r in self.slots])
-        if not active.any():
-            return
-        if self.metrics is not None:
-            self.metrics.registry.gauge("serve_slot_occupancy").set(
-                int(active.sum()))
-            for req in self.slots:
-                st = (self._rstats.get(id(req))
-                      if req is not None else None)
-                if st is not None:
-                    st["decode_ticks"] = st.get("decode_ticks", 0) + 1
-        tokens = jnp.asarray(self._next_token)
-        active_dev = jnp.asarray(active)
-        if self.mesh is not None:
-            tokens = jax.device_put(tokens, self._slot_sharding)
-            active_dev = jax.device_put(active_dev,
-                                        self._slot_sharding)
-        span = (self.metrics.tracer.span("decode_tick",
-                                         active=int(active.sum()))
-                if self.metrics is not None else _NULL_SPAN)
-        with span:
-            cache, logits = self._decode(self.params, self.cache,
-                                         tokens, active_dev)
-            # Re-pin (no-copy when the layout already matches) so the
-            # KV cache stays slot-partitioned even if output-sharding
-            # propagation ever produces a different layout.
-            self.cache = self._pin(cache)
-            # Blocks, so the span covers the device step.
-            nxt = np.asarray(self.model.greedy(logits))
-        for slot, req in enumerate(list(self.slots)):
-            if req is not None:
-                self._emit(slot, req, int(nxt[slot]))
-
     # -- public API --------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Drive all ``requests`` to completion; returns them in order.
 
-        Admission is FIFO; more requests than slots simply queue and
-        are admitted as earlier ones finish.
+        Requests are validated up front (:class:`SamplingParamError`,
+        a ``ValueError``); admission follows the scheduler policy, and
+        more requests than slots simply queue and are admitted as
+        earlier ones finish.
         """
-        queue = deque(requests)
+        self.scheduler.submit(requests)
         if self.metrics is not None:
-            t0 = time.perf_counter()
             for req in requests:
-                self._rstats[id(req)] = {"t_enqueue": t0}
-        while queue or any(r is not None for r in self.slots):
-            self._admit(queue)
-            self._tick()
+                self._rstats[id(req)] = {
+                    "t_enqueue": self.scheduler.t_enqueue(req)}
+        while (self.scheduler.pending or
+               any(r is not None for r in self.slots)):
+            self._admit()
+            self._prefill_tick()
+            self._decode_tick()
         if self.metrics is not None:
             self.metrics.registry.gauge("serve_slot_occupancy").set(0)
             # Site-event callbacks (plan/policy runs) are async; drain

@@ -104,9 +104,7 @@ class TestEngine:
                          plan=plan)
         # The plan actually reaches the transform: the prefill program
         # offloads its projection GEMMs under the plan's size gate.
-        tok = jnp.asarray(np.zeros((4, 16), np.int32))
-        lengths = jnp.asarray(np.full((4,), 16, np.int32))
-        psites = planned._prefill_fn.sites(params, tok, lengths)
+        psites = planned.prefill_sites(rows=4, width=16)
         assert sum(s.offloaded for s in psites) > 0
         done_plan = planned.run(reqs())
         done_bare = Engine(model, params, batch_slots=4,
