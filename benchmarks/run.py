@@ -597,8 +597,14 @@ def main() -> None:
             us = float(parts[1]) if len(parts) > 1 else None
         except ValueError:
             us = None
+        derived = parts[2] if len(parts) > 2 else ""
+        # Mirror the numeric view of the derived payload so obs diff
+        # compares values without re-parsing the CSV string.
+        from repro.obs.diff import parse_derived
+
         metrics.event("bench_row", name=parts[0], us_per_call=us,
-                      derived=parts[2] if len(parts) > 2 else "")
+                      derived=derived,
+                      derived_num=parse_derived(derived))
 
     print("name,us_per_call,derived")
     try:

@@ -66,6 +66,15 @@ def main():
     ap.add_argument("--metrics-dir", default="",
                     help="telemetry dir (repro.obs JSONL); default: "
                          "<ckpt-dir>/metrics; 'none' disables")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live Prometheus /metrics on this port "
+                         "while the engine runs (0 = ephemeral; the "
+                         "chosen port is printed)")
+    ap.add_argument("--hold-metrics-s", type=float, default=0.0,
+                    help="keep the /metrics endpoint up this many "
+                         "seconds after decoding finishes, so an "
+                         "external scraper (the CI smoke) can read "
+                         "the final counters")
     args = ap.parse_args()
 
     arch, overrides, _, _ = PRESETS[args.preset]
@@ -110,7 +119,11 @@ def main():
                     chunk_tokens=args.chunk_tokens,
                     chunk_token_budget=args.chunk_token_budget,
                     warm_cache_dir=args.warm_cache_dir or None,
-                    scheduler_policy=args.scheduler_policy)
+                    scheduler_policy=args.scheduler_policy,
+                    metrics_port=args.metrics_port)
+    if engine.metrics_server is not None:
+        print(f"[serve] live metrics: "
+              f"{engine.metrics_server.url}/metrics", flush=True)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=[int(t) for t in
                             rng.integers(1, cfg.vocab_size, 16)],
@@ -121,7 +134,14 @@ def main():
             for i in range(4)]
     try:
         done = engine.run(reqs)
+        if engine.metrics_server is not None and args.hold_metrics_s:
+            import time
+
+            print(f"[serve] holding /metrics open for "
+                  f"{args.hold_metrics_s:.0f}s", flush=True)
+            time.sleep(args.hold_metrics_s)
     finally:
+        engine.close()
         if metrics is not None:
             metrics.close()
     for i, r in enumerate(done):

@@ -222,6 +222,17 @@ def _parse(argv):
     ap.add_argument("--metrics-dir", default="",
                     help="telemetry directory (repro.obs JSONL runs); "
                          "default: <ckpt-dir>/metrics; 'none' disables")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the run's registry live at "
+                         "http://127.0.0.1:PORT/metrics (Prometheus "
+                         "text format; 0 = ephemeral port) while "
+                         "training; requires telemetry on")
+    ap.add_argument("--metrics-push-url", default="",
+                    help="push this process's registry snapshot to an "
+                         "aggregating metrics server (http://host:port"
+                         "/push) every --log-every steps — how a "
+                         "multi-process mesh job publishes into one "
+                         "scrapeable /metrics endpoint")
     ap.add_argument("--numerics-every", type=int, default=25,
                     help="NumericsMonitor period: every Nth step "
                          "re-measure the probe site's realized error "
@@ -388,6 +399,29 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                       backend=args.backend or None,
                       plan=args.plan or None, mesh=args.mesh or None)
 
+    # Live observability: a pull endpoint over this run's registry
+    # and/or periodic pushes into another process's aggregator.
+    mserver = None
+    push_url = args.metrics_push_url if metrics is not None else ""
+    push_source = f"train-proc{jax.process_index()}"
+    if metrics is not None and args.metrics_port is not None:
+        from repro.obs import MetricsServer
+
+        mserver = MetricsServer(metrics.registry,
+                                port=args.metrics_port,
+                                runs_dir=metrics.directory).start()
+        log.info(f"live metrics: {mserver.url}/metrics")
+
+    def push_metrics() -> None:
+        if not push_url:
+            return
+        from repro.obs import push_snapshot
+
+        try:
+            push_snapshot(push_url, push_source, metrics.registry)
+        except OSError as e:
+            log.warning(f"metrics push to {push_url} failed: {e}")
+
     on_site_event = metrics.site_event_handler() if metrics else None
     monitor = None
     policy = None
@@ -465,6 +499,7 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
                          f"loss={losses[-1]:.4f} "
                          f"({(now - t_last) * 1e3:.0f} ms)")
                 t_last = now
+                push_metrics()
             if (step + 1) % args.ckpt_every == 0:
                 save_ckpt(step + 1, (params, opt_state))
         save_ckpt(args.steps, (params, opt_state))
@@ -473,7 +508,10 @@ def main(argv: Optional[Sequence[str]] = None) -> List[float]:
             # Drain async site-event callbacks before the final
             # registry snapshot, so execution counts are complete.
             jax.effects_barrier()
+            push_metrics()
             metrics.close()
+        if mserver is not None:
+            mserver.close()
     log.info(f"done at step {args.steps}; checkpoint in {ckpt_dir}")
     if metrics is not None:
         log.info(f"telemetry: {metrics.sink.path} (inspect with "

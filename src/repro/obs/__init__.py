@@ -6,40 +6,62 @@ layer of the repo:
 * :mod:`repro.obs.log` — leveled stderr logger (``REPRO_LOG_LEVEL``)
   whose INFO rendering matches the pre-existing ``[train]``-style
   prints;
-* :mod:`repro.obs.registry` — labeled counters/gauges/histograms,
-  safe to update from ``jax.debug.callback`` threads;
+* :mod:`repro.obs.registry` — labeled counters/gauges/histograms
+  (with p50/p95/p99 estimates), safe to update from
+  ``jax.debug.callback`` threads;
 * :mod:`repro.obs.trace` — span tracer with Chrome-trace export;
 * :mod:`repro.obs.events` — JSONL structured-event sink and the
   run-scoped :class:`MetricsRun` bundle the entry points construct;
 * :mod:`repro.obs.numerics` — :class:`NumericsMonitor`, the runtime
   drift check that closes the calibrate→train loop;
-* ``python -m repro.obs`` — the ``report``/``export`` CLI
-  (:mod:`repro.obs.cli`).
+* :mod:`repro.obs.server` — the live plane: :class:`MetricsServer`
+  serves ``/metrics`` in Prometheus text format while a job runs, and
+  aggregates multi-process pushes (:func:`push_snapshot`);
+* :mod:`repro.obs.slo` — :class:`SLOTracker`, rolling-window
+  burn-rate accounting for serve latency targets;
+* :mod:`repro.obs.attrib` — per-site cost attribution (measured wall
+  × tile-model costs → ranked retuning table);
+* :mod:`repro.obs.diff` — structured cross-run regression comparison;
+* ``python -m repro.obs`` — the ``report``/``export``/``attrib``/
+  ``diff`` CLI (:mod:`repro.obs.cli`).
 """
 
-from .events import EventSink, MetricsRun, json_safe, load_runs, \
-    read_events
+from .attrib import AttribRow, attribution
+from .diff import DiffReport, diff_runs
+from .events import EventList, EventSink, MetricsRun, json_safe, \
+    load_runs, read_events
 from .log import LEVELS, Logger, get_logger, reset_logger
 from .numerics import NumericsMonitor, NumericsReport
 from .registry import Counter, Gauge, Histogram, Registry
+from .server import MetricsServer, push_snapshot, render_prometheus
+from .slo import SLOTracker
 from .trace import Tracer, to_chrome, write_chrome_trace
 
 __all__ = [
+    "AttribRow",
     "Counter",
+    "DiffReport",
+    "EventList",
     "EventSink",
     "Gauge",
     "Histogram",
     "LEVELS",
     "Logger",
     "MetricsRun",
+    "MetricsServer",
     "NumericsMonitor",
     "NumericsReport",
     "Registry",
+    "SLOTracker",
     "Tracer",
+    "attribution",
+    "diff_runs",
     "get_logger",
     "json_safe",
     "load_runs",
+    "push_snapshot",
     "read_events",
+    "render_prometheus",
     "reset_logger",
     "to_chrome",
     "write_chrome_trace",

@@ -1,6 +1,6 @@
-"""``python -m repro.obs`` — report and export telemetry runs.
+"""``python -m repro.obs`` — report, export, attribute, and diff runs.
 
-Two subcommands over a metrics directory of ``events-NNNN.jsonl``
+Four subcommands over a metrics directory of ``events-NNNN.jsonl``
 files (as written by :class:`repro.obs.events.MetricsRun`):
 
 ``report <dir>``
@@ -8,14 +8,28 @@ files (as written by :class:`repro.obs.events.MetricsRun`):
     human-readable tables: the per-site decision/execution table
     (backend, splits, flops, executions, realized numerics error),
     the per-step loss/timing summary, numerics-drift checks, serve
-    per-request latencies, and span totals.  ``--check`` turns the
-    report into a CI gate: exit nonzero unless every *offloaded*
-    declared site recorded at least one execution.
+    per-request latencies with p50/p95/p99 estimates, and span
+    totals.  Torn JSONL lines (a killed run's final write) are
+    counted, not silently skipped.  ``--check`` turns the report into
+    a CI gate: exit nonzero unless every *offloaded* declared site
+    recorded at least one execution.
 
 ``export <dir> [-o trace.json]``
     Convert the run's span events into a Chrome Trace Event JSON file
     that ``chrome://tracing`` and https://ui.perfetto.dev open
     directly.
+
+``attrib <dir>``
+    The per-site cost attribution table (:mod:`repro.obs.attrib`):
+    measured hot-loop wall time distributed over offloaded sites by
+    their tile-model cost, with INT8-GEMM shares and a demote-to
+    suggestion per site.
+
+``diff <run_a> <run_b>``
+    Structured cross-run comparison (:mod:`repro.obs.diff`): bench
+    timing ratios ranked worst-first, metric-series deltas, numerics
+    drift changes.  ``--check`` gates machine-portable structural
+    regressions for CI; ``--max-ratio R`` additionally gates timing.
 """
 
 from __future__ import annotations
@@ -111,7 +125,10 @@ def _report_run(run_id: str, events: List[dict], out,
                 expect_cache_hit: bool = False) -> int:
     grouped = _by_type(events)
     failures = 0
-    print(f"run {run_id}: {len(events)} events", file=out)
+    torn = getattr(events, "dropped", 0)
+    suffix = (f" ({torn} torn line(s) dropped — killed run or "
+              "truncated copy)") if torn else ""
+    print(f"run {run_id}: {len(events)} events{suffix}", file=out)
 
     decls = grouped.get("site_decl", [])
     execs = _site_exec_counts(grouped)
@@ -212,6 +229,18 @@ def _report_run(run_id: str, events: List[dict], out,
                      kv.get("serve_kv_block_utilization"),
                      kv.get("serve_queue_depth")]], out)
 
+    hists = [ev for ev in grouped.get("metric", ())
+             if ev.get("kind") == "histogram" and ev.get("count")
+             and str(ev.get("name", "")).startswith("serve_")]
+    if hists:
+        print("serve latency quantiles (decade-bucket estimates):",
+              file=out)
+        _table(["metric", "count", "mean", "p50", "p95", "p99"],
+               [[h.get("name"), h.get("count"), h.get("mean"),
+                 h.get("p50"), h.get("p95"), h.get("p99")]
+                for h in sorted(hists, key=lambda h: h.get("name"))],
+               out)
+
     rows = grouped.get("bench_row", [])
     if rows:
         print("bench:", file=out)
@@ -234,6 +263,72 @@ def _report_run(run_id: str, events: List[dict], out,
         print("CHECK OK: every offloaded site recorded executions",
               file=out)
     return failures
+
+
+def _run_attrib(run_id: str, events: List[dict], out) -> int:
+    from .attrib import attribution
+
+    rows = attribution(events)
+    print(f"run {run_id}: cost attribution over "
+          f"{len(rows)} offloaded site(s)", file=out)
+    if not rows:
+        print("  (no offloaded site_decl events in this run — was it "
+              "launched without a backend/plan?)", file=out)
+        return 1
+    _table(["site", "s", "execs", "int8_gemms", "gemm%", "wall%",
+            "wall_s", "suggestion"],
+           [[r.site, r.splits, r.execs, r.int8_gemms,
+             f"{100 * r.gemm_share:.1f}", f"{100 * r.wall_share:.1f}",
+             r.wall_s, r.suggestion()] for r in rows], out)
+    return 0
+
+
+def _run_diff(args, out) -> int:
+    from .diff import diff_runs
+
+    (id_a, ev_a), = _select_runs(args.run_a, False, None).items()
+    (id_b, ev_b), = _select_runs(args.run_b, False, None).items()
+    report = diff_runs(ev_a, ev_b, run_a=f"{args.run_a}:{id_a}",
+                       run_b=f"{args.run_b}:{id_b}")
+    print(f"diff {report.run_a} -> {report.run_b}", file=out)
+
+    slower = report.regressions(1.0)
+    if slower:
+        print("bench rows slower in B (ratio = B/A):", file=out)
+        _table(["name", "us_a", "us_b", "ratio"],
+               [[b.name, b.us_a, b.us_b, b.ratio]
+                for b in slower[:15]], out)
+    missing = report.missing_rows()
+    if missing:
+        print(f"bench rows missing from B: {', '.join(missing)}",
+              file=out)
+    skips = report.new_skips()
+    if skips:
+        print(f"bench rows newly skipped in B: {', '.join(skips)}",
+              file=out)
+    gone = [s.key for s in report.missing_series()]
+    if gone:
+        print(f"metric series missing from B: {', '.join(gone[:20])}",
+              file=out)
+    drifted = report.drift_increases()
+    if drifted:
+        print("numerics drift increases:", file=out)
+        _table(["site", "drift_a", "drift_b", "realized_a",
+                "realized_b"],
+               [[n.site, n.drift_a, n.drift_b, n.realized_a,
+                 n.realized_b] for n in drifted], out)
+    if not (slower or missing or skips or gone or drifted):
+        print("no regressions detected", file=out)
+
+    if not args.check:
+        return 0
+    failures = report.failures(max_ratio=args.max_ratio)
+    for f in failures:
+        print(f"CHECK FAIL: {f}", file=out)
+    if not failures:
+        print("CHECK OK: no structural regressions between runs",
+              file=out)
+    return 1 if failures else 0
 
 
 def _select_runs(directory: str, all_runs: bool,
@@ -288,8 +383,36 @@ def main(argv=None, out=None) -> int:
     exp.add_argument("-o", "--output", default="trace.json",
                      help="output path (default trace.json)")
 
+    att = sub.add_parser("attrib", help="per-site cost attribution "
+                         "(wall x tile-model) for one run")
+    att.add_argument("directory", help="metrics dir (or one "
+                     "events-*.jsonl file)")
+    att.add_argument("--run", default=None,
+                     help="attribute this run id (default: latest)")
+
+    dif = sub.add_parser("diff", help="compare two recorded runs")
+    dif.add_argument("run_a", help="baseline: metrics dir (latest "
+                     "run) or one events-*.jsonl file")
+    dif.add_argument("run_b", help="candidate: metrics dir (latest "
+                     "run) or one events-*.jsonl file")
+    dif.add_argument("--check", action="store_true",
+                     help="exit nonzero on structural regressions "
+                     "(missing bench rows, new skips, vanished "
+                     "counter series, numerics drift increases)")
+    dif.add_argument("--max-ratio", type=float, default=None,
+                     help="with --check: also fail bench rows whose "
+                     "B/A timing ratio exceeds this (same-machine "
+                     "comparisons only — wall clock is not portable)")
+
     args = parser.parse_args(argv)
-    runs = _select_runs(args.directory, args.all, args.run)
+    if args.cmd == "diff":
+        return _run_diff(args, out)
+    runs = _select_runs(args.directory, args.all
+                        if args.cmd != "attrib" else False, args.run)
+
+    if args.cmd == "attrib":
+        run_id, events = sorted(runs.items())[-1]
+        return _run_attrib(run_id, events, out)
 
     if args.cmd == "report":
         failures = 0

@@ -36,8 +36,8 @@ from typing import Dict, List, Optional
 from .registry import Registry
 from .trace import Tracer
 
-__all__ = ["EventSink", "MetricsRun", "json_safe", "read_events",
-           "load_runs"]
+__all__ = ["EventList", "EventSink", "MetricsRun", "json_safe",
+           "read_events", "load_runs"]
 
 
 def json_safe(v):
@@ -203,10 +203,27 @@ class MetricsRun:
 # -- reading (the report/export CLI's input layer) ---------------------
 
 
-def read_events(path) -> List[dict]:
-    """Parse one JSONL file; malformed lines are skipped, not fatal
-    (a killed run may leave a torn final line)."""
-    events = []
+class EventList(list):
+    """A list of events that also counts the lines it could NOT parse.
+
+    ``dropped`` is the ``events_torn_lines`` count: malformed JSONL
+    lines (a killed run's torn final write, a truncated copy) that
+    :func:`read_events` skipped.  It is an attribute rather than a
+    second return value so every existing ``for ev in read_events(p)``
+    caller keeps working unchanged.
+    """
+
+    def __init__(self, events=(), dropped: int = 0):
+        super().__init__(events)
+        self.dropped = int(dropped)
+
+
+def read_events(path) -> "EventList":
+    """Parse one JSONL file; malformed lines are counted in the
+    returned :class:`EventList`'s ``dropped``, not silently lost (a
+    killed run may leave a torn final line — the report surfaces how
+    many lines that cost)."""
+    events = EventList()
     for line in Path(path).read_text().splitlines():
         line = line.strip()
         if not line:
@@ -214,9 +231,12 @@ def read_events(path) -> List[dict]:
         try:
             ev = json.loads(line)
         except json.JSONDecodeError:
+            events.dropped += 1
             continue
         if isinstance(ev, dict):
             events.append(ev)
+        else:
+            events.dropped += 1  # parseable but not an event object
     return events
 
 

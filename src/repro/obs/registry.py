@@ -93,7 +93,11 @@ class Histogram(_Metric):
 
     The bucket bounds (:data:`BUCKET_BOUNDS`) are decades from 1e-6 to
     1e3 — coarse, but stable across runs, which is what the report
-    tables need; exact quantiles are not a goal at this layer.
+    tables need.  :meth:`quantile` estimates p50/p95/p99 from those
+    buckets by geometric interpolation inside the covering decade,
+    clamped to the observed min/max — decade-resolution estimates, which
+    is exactly the precision the latency tables and the ``/metrics``
+    summary series advertise.
     """
 
     def __init__(self, name, labels):
@@ -121,6 +125,38 @@ class Histogram(_Metric):
         with self._lock:
             return self.sum / self.count if self.count else 0.0
 
+    def _quantile_locked(self, q: float) -> float | None:
+        """Estimate the q-quantile from the decade buckets (lock held).
+
+        Geometric interpolation inside the covering bucket (its lower
+        edge is the previous bound; the first bucket extends one decade
+        below its bound), clamped to the observed [min, max] so values
+        outside the decade grid — negatives in the first bucket, the
+        +inf tail — degrade to the true extrema instead of nonsense.
+        """
+        if not self.count:
+            return None
+        target = q * self.count
+        cum = 0.0
+        for i, cnt in enumerate(self.bucket_counts):
+            if cum + cnt >= target and cnt:
+                hi = BUCKET_BOUNDS[i]
+                if math.isinf(hi):
+                    return self.max
+                lo = BUCKET_BOUNDS[i - 1] if i else BUCKET_BOUNDS[0] / 10
+                frac = (target - cum) / cnt
+                est = lo * (hi / lo) ** frac
+                return min(max(est, self.min), self.max)
+            cum += cnt
+        return self.max
+
+    def quantile(self, q: float) -> float | None:
+        """Estimated q-quantile (0 < q <= 1); ``None`` when empty."""
+        if not 0.0 < q <= 1.0:
+            raise ValueError(f"quantile q must be in (0, 1], got {q}")
+        with self._lock:
+            return self._quantile_locked(q)
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
@@ -130,6 +166,9 @@ class Histogram(_Metric):
                 "min": self.min if self.count else None,
                 "max": self.max if self.count else None,
                 "mean": self.sum / self.count if self.count else None,
+                "p50": self._quantile_locked(0.50),
+                "p95": self._quantile_locked(0.95),
+                "p99": self._quantile_locked(0.99),
                 "buckets": [[("inf" if math.isinf(b) else b), c]
                             for b, c in zip(BUCKET_BOUNDS,
                                             self.bucket_counts)],

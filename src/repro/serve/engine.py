@@ -54,7 +54,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import PrecisionPolicy
 from repro.models import Model
-from repro.obs import get_logger
+from repro.obs import MetricsServer, SLOTracker, get_logger
 from repro.serve.kvcache import DenseKVCache, PagedKVCache
 from repro.serve.runner import Runner
 from repro.serve.scheduler import (Request, SamplingParamError,
@@ -117,6 +117,14 @@ class Engine:
         policy/plan runs only.
       scheduler_policy: ``"fifo"`` (default, the pre-refactor order)
         or ``"edf"`` (earliest ``t_enqueue + latency_target_s`` first).
+      metrics_port: start a live :class:`repro.obs.MetricsServer` on
+        this port (0 = ephemeral; read it back from
+        ``engine.metrics_server.port``) serving the run's registry at
+        ``/metrics`` while the engine runs.  Requires ``metrics=``.
+      slo_objective / slo_window_s: the serve SLO — per-request TTFT
+        vs ``latency_target_s`` feeds a rolling burn-rate gauge
+        (``slo_burn_rate``) via :class:`repro.obs.SLOTracker`; only
+        active with ``metrics=``.
     """
 
     def __init__(self, model: Model, params, batch_slots: int = 4,
@@ -128,7 +136,10 @@ class Engine:
                  chunk_tokens: Optional[int] = None,
                  chunk_token_budget: Optional[int] = None,
                  warm_cache_dir=None,
-                 scheduler_policy: str = "fifo"):
+                 scheduler_policy: str = "fifo",
+                 metrics_port: Optional[int] = None,
+                 slo_objective: float = 0.99,
+                 slo_window_s: float = 60.0):
         if kv_layout not in ("paged", "dense"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}; "
                              "have ('paged', 'dense')")
@@ -196,9 +207,23 @@ class Engine:
             metrics=metrics, chunk_tokens=chunk_tokens,
             chunk_token_budget=chunk_token_budget,
             warm_cache_dir=warm_cache_dir)
+        self.slo = None
+        if metrics is not None:
+            self.slo = SLOTracker(registry=metrics.registry,
+                                  objective=slo_objective,
+                                  window_s=slo_window_s,
+                                  sink=metrics.sink)
         self.scheduler = Scheduler(self.max_len,
                                    policy=scheduler_policy,
-                                   metrics=metrics)
+                                   metrics=metrics, slo=self.slo)
+        self.metrics_server = None
+        if metrics_port is not None:
+            if metrics is None:
+                raise ValueError("metrics_port requires metrics= (the "
+                                 "server exposes that run's registry)")
+            self.metrics_server = MetricsServer(
+                metrics.registry, port=metrics_port,
+                runs_dir=metrics.directory).start()
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self._next_token = np.zeros(self.batch_slots, np.int32)
         # Per-request latency bookkeeping, keyed by request identity
@@ -303,6 +328,8 @@ class Engine:
                 if slack < 0:
                     self.metrics.registry.counter(
                         "serve_latency_miss").inc()
+            if self.slo is not None:
+                self.slo.observe(st["ttft_s"], req.latency_target_s)
         self._next_token[slot] = token
         eos = self.model.cfg.eos_id
         length_next = len(req.prompt) + len(req.out)
@@ -362,3 +389,9 @@ class Engine:
             # them so execution counters are complete at flush time.
             jax.effects_barrier()
         return requests
+
+    def close(self) -> None:
+        """Stop the live metrics server, if one was started."""
+        if self.metrics_server is not None:
+            self.metrics_server.close()
+            self.metrics_server = None

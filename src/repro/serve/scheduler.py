@@ -98,13 +98,17 @@ class Scheduler:
     POLICIES = ("fifo", "edf")
 
     def __init__(self, max_len: int, policy: str = "fifo",
-                 metrics=None):
+                 metrics=None, slo=None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown scheduler policy {policy!r}; "
                              f"have {self.POLICIES}")
         self.max_len = int(max_len)
         self.policy = policy
         self.metrics = metrics
+        # Optional repro.obs.SLOTracker: under edf, admitting a request
+        # whose deadline already lapsed in the queue is reported as a
+        # late admission (the violation is certain before prefill).
+        self.slo = slo
         self._queue: List[Request] = []
         self._t_enqueue: dict = {}
 
@@ -162,6 +166,15 @@ class Scheduler:
             placed.append((slot, req))
         for _, req in placed:
             self._queue.remove(req)
+        if self.policy == "edf" and self.slo is not None and placed:
+            now = time.perf_counter()
+            for _, req in placed:
+                if req.latency_target_s is None:
+                    continue
+                overdue = now - (self._t_enqueue[id(req)]
+                                 + req.latency_target_s)
+                if overdue > 0:
+                    self.slo.late_admission(overdue)
         self._gauge()
         return placed
 

@@ -51,6 +51,31 @@ class TestRegistry:
         assert buckets["inf"] == 1       # 5000 beyond the last decade
         assert sum(c for _, c in snap["buckets"]) == 3
 
+    def test_histogram_quantiles(self):
+        h = Registry().histogram("lat_s")
+        assert h.quantile(0.5) is None  # empty
+        for v in (0.01, 0.02, 0.03, 0.04, 9.0):
+            h.observe(v)
+        p50, p95, p99 = (h.quantile(q) for q in (0.5, 0.95, 0.99))
+        # Estimates are clamped to the observed range and monotone.
+        assert 0.01 <= p50 <= p95 <= p99 <= 9.0
+        assert p50 < 0.1       # 4 of 5 samples in (0.01, 0.1]
+        assert p99 > 1.0       # the tail sample dominates p99
+        snap = h.snapshot()
+        assert snap["p50"] == pytest.approx(p50)
+        assert snap["p95"] == pytest.approx(p95)
+        assert snap["p99"] == pytest.approx(p99)
+        for bad in (0.0, 1.5, -1.0):
+            with pytest.raises(ValueError, match="quantile"):
+                h.quantile(bad)
+
+    def test_histogram_quantile_single_value(self):
+        h = Registry().histogram("lat_s")
+        h.observe(2.5)
+        # Clamping pins every quantile to the one observation.
+        assert h.quantile(0.5) == 2.5
+        assert h.quantile(0.99) == 2.5
+
     def test_kind_conflict_raises(self):
         reg = Registry()
         reg.counter("x", a="1")
@@ -125,6 +150,49 @@ class TestTracer:
         assert ev["name"] == "work" and ev["args"] == {"k": 1}
         assert isinstance(ev["ts"], float) and ev["dur"] >= 0.0
 
+    def test_chrome_trace_keeps_error_flag(self):
+        tr = Tracer()
+        with pytest.raises(ValueError):
+            with tr.span("load_ckpt", step=3):
+                raise ValueError("corrupt")
+        doc = to_chrome(tr.events)
+        json.dumps(doc)
+        (ev,) = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        # The error marker survives export so the viewer can flag it.
+        assert ev["args"] == {"step": 3, "error": True}
+
+    def test_chrome_trace_concurrent_spans(self):
+        import threading
+
+        tr = Tracer()
+        gate = threading.Barrier(2)
+
+        def work(name):
+            with tr.span(name):
+                gate.wait()      # both spans provably overlap
+                with tr.span(f"{name}/inner"):
+                    pass
+
+        threads = [threading.Thread(target=work, args=(n,))
+                   for n in ("prefill", "decode")]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        doc = to_chrome(tr.events)
+        json.dumps(doc)
+        spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert {s["name"] for s in spans} == {
+            "prefill", "decode", "prefill/inner", "decode/inner"}
+        # Each thread keeps its own lane: the viewer must not stack
+        # overlapping spans from different threads on one tid.
+        tids = {s["name"]: s["tid"] for s in spans}
+        assert tids["prefill"] != tids["decode"]
+        assert tids["prefill"] == tids["prefill/inner"]
+        assert tids["decode"] == tids["decode/inner"]
+        for s in spans:
+            assert isinstance(s["tid"], int)
+
 
 class TestEvents:
     def test_json_safe_coerces_numpy(self):
@@ -165,6 +233,17 @@ class TestEvents:
                         '{"t": 2, "type": "ru')  # killed mid-write
         events = read_events(path)
         assert len(events) == 1 and events[0]["loss"] == 2.0
+        assert events.dropped == 1
+
+    def test_read_events_counts_all_torn_lines(self, tmp_path):
+        path = tmp_path / "events-0000.jsonl"
+        path.write_text('{"type": "step", "loss": 2.0}\n'
+                        'not json at all\n'
+                        '[1, 2, 3]\n'             # parseable non-dict
+                        '{"type": "step", "loss": 1.0}\n')
+        events = read_events(path)
+        assert [e["loss"] for e in events] == [2.0, 1.0]
+        assert events.dropped == 2
 
     def test_site_decl_carries_tile_choice(self, tmp_path):
         # Pallas-family sites declare the analytic tile model's pick;
@@ -475,6 +554,28 @@ class TestCli:
         with pytest.raises(SystemExit):
             obs_main(["report", str(tmp_path), "--run", "9999"],
                      out=io.StringIO())
+
+    def test_report_surfaces_torn_lines(self, tmp_path):
+        run_id, _ = _seed_run(tmp_path)
+        path = tmp_path / f"events-{run_id}.jsonl"
+        with path.open("a") as f:
+            f.write('{"type": "ru')  # killed mid-write
+        out = io.StringIO()
+        assert obs_main(["report", str(tmp_path)], out=out) == 0
+        assert "1 torn line(s) dropped" in out.getvalue()
+
+    def test_report_latency_quantile_table(self, tmp_path):
+        run = MetricsRun(tmp_path)
+        h = run.registry.histogram("serve_ttft_s")
+        for v in (0.01, 0.02, 0.03, 4.0):
+            h.observe(v)
+        run.close()
+        out = io.StringIO()
+        assert obs_main(["report", str(tmp_path)], out=out) == 0
+        text = out.getvalue()
+        assert "serve latency quantiles" in text
+        assert "p50" in text and "p95" in text and "p99" in text
+        assert "serve_ttft_s" in text
 
     def test_export_writes_chrome_trace(self, tmp_path):
         _seed_run(tmp_path / "metrics")

@@ -1,0 +1,538 @@
+"""Live observability plane tests: the Prometheus /metrics server and
+its text rendering, push aggregation, SLO burn-rate tracking, per-site
+cost attribution, and the obs diff regression gate."""
+
+import io
+import json
+import re
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LMConfig
+from repro.core import PrecisionPolicy, site_report
+from repro.models import Model
+from repro.obs import (MetricsRun, MetricsServer, Registry, SLOTracker,
+                       attribution, diff_runs, push_snapshot,
+                       render_prometheus)
+from repro.obs.attrib import publish
+from repro.obs.cli import main as obs_main
+from repro.obs.diff import parse_derived
+from repro.serve import Engine, Request
+from repro.serve.scheduler import Scheduler
+
+# -- a small but real Prometheus text-format parser --------------------
+# The acceptance criterion is "valid Prometheus text format, parsed by
+# a test": every sample line must match the exposition grammar and
+# label values must round-trip through the escaping rules.
+
+_SAMPLE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})? (\S+)$')
+_LABEL = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _unescape(v: str) -> str:
+    out, i = [], 0
+    while i < len(v):
+        if v[i] == "\\" and i + 1 < len(v):
+            out.append({"n": "\n", '"': '"', "\\": "\\"}
+                       .get(v[i + 1], v[i:i + 2]))
+            i += 2
+        else:
+            out.append(v[i])
+            i += 1
+    return "".join(out)
+
+
+def parse_prometheus(text: str) -> dict:
+    """{(name, ((label, value), ...)): float} plus a _types map."""
+    series, types = {}, {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            types[name] = kind
+            continue
+        assert not line.startswith("#"), line
+        m = _SAMPLE.match(line)
+        assert m, f"invalid exposition line: {line!r}"
+        name, labels, value = m.groups()
+        lbls = {}
+        if labels:
+            consumed = _LABEL.sub("", labels).replace(",", "")
+            assert consumed == "", f"unparsed labels in {line!r}"
+            for k, v in _LABEL.findall(labels):
+                lbls[k] = _unescape(v)
+        key = (name, tuple(sorted(lbls.items())))
+        assert key not in series, f"duplicate series {key}"
+        series[key] = (float("inf") if value == "+Inf"
+                       else float(value))
+    series["_types"] = types
+    return series
+
+
+class TestRenderPrometheus:
+    def test_counters_gauges_and_types(self):
+        reg = Registry()
+        reg.counter("site_exec", site="dot0").inc(5)
+        reg.gauge("slo_burn_rate").set(1.25)
+        parsed = parse_prometheus(render_prometheus(reg.snapshot()))
+        assert parsed[("site_exec", (("site", "dot0"),))] == 5
+        assert parsed[("slo_burn_rate", ())] == 1.25
+        assert parsed["_types"]["site_exec"] == "counter"
+        assert parsed["_types"]["slo_burn_rate"] == "gauge"
+
+    def test_label_escaping_round_trips(self):
+        # The structural site names the transform produces — with the
+        # mesh suffix — plus the pathological escapes of the format.
+        names = ['shmap0/dot1 [dp=4,tp=2]', 'a"b', "back\\slash",
+                 "new\nline"]
+        reg = Registry()
+        for n in names:
+            reg.counter("site_exec", site=n).inc()
+        parsed = parse_prometheus(render_prometheus(reg.snapshot()))
+        for n in names:
+            assert parsed[("site_exec", (("site", n),))] == 1
+
+    def test_histogram_buckets_sum_count_quantiles(self):
+        reg = Registry()
+        h = reg.histogram("serve_ttft_s")
+        for v in (0.002, 0.03, 0.04, 5.0):
+            h.observe(v)
+        parsed = parse_prometheus(render_prometheus(reg.snapshot()))
+        assert parsed["_types"]["serve_ttft_s"] == "histogram"
+        assert parsed[("serve_ttft_s_count", ())] == 4
+        assert parsed[("serve_ttft_s_sum", ())] == pytest.approx(5.072)
+        # Cumulative buckets: monotone, +Inf bucket == count.
+        buckets = sorted(
+            ((dict(k[1])["le"], v) for k, v in parsed.items()
+             if isinstance(k, tuple) and k[0] == "serve_ttft_s_bucket"),
+            key=lambda kv: float(kv[0]))
+        counts = [v for _, v in buckets]
+        assert counts == sorted(counts)
+        assert buckets[-1][0] == "+Inf" and buckets[-1][1] == 4
+        for q in ("0.5", "0.95", "0.99"):
+            key = ("serve_ttft_s_quantile", (("quantile", q),))
+            assert 0.002 <= parsed[key] <= 5.0
+
+    def test_empty_and_name_sanitization(self):
+        assert render_prometheus([]) == ""
+        reg = Registry()
+        reg.counter("bad-name.1").inc()
+        text = render_prometheus(reg.snapshot())
+        assert "bad_name_1 1" in text
+
+
+class TestMetricsServer:
+    def test_metrics_endpoint_parses(self, tmp_path):
+        run = MetricsRun(tmp_path)
+        run.registry.counter("site_exec",
+                             site="shmap0/dot1 [dp=4,tp=2]").inc(3)
+        srv = MetricsServer(run.registry, runs_dir=tmp_path).start()
+        try:
+            body = urllib.request.urlopen(
+                f"{srv.url}/metrics").read().decode()
+            parsed = parse_prometheus(body)
+            key = ("site_exec",
+                   (("site", "shmap0/dot1 [dp=4,tp=2]"),))
+            assert parsed[key] == 3
+
+            health = json.loads(urllib.request.urlopen(
+                f"{srv.url}/healthz").read())
+            assert health["status"] == "ok"
+            assert health["series"] == 1
+
+            runs = json.loads(urllib.request.urlopen(
+                f"{srv.url}/runs").read())
+            assert runs["runs"][0]["run_id"] == run.run_id
+            assert runs["runs"][0]["events_torn_lines"] == 0
+
+            with pytest.raises(urllib.error.HTTPError) as e:
+                urllib.request.urlopen(f"{srv.url}/nope")
+            assert e.value.code == 404
+        finally:
+            srv.close()
+            run.close()
+
+    def test_push_aggregation(self):
+        local = Registry()
+        local.counter("steps").inc(2)
+        srv = MetricsServer(local).start()
+        try:
+            worker = Registry()
+            worker.counter("steps").inc(7)
+            ack = push_snapshot(srv.url, "proc1", worker)
+            assert ack["ok"] and ack["series"] == 1
+            parsed = parse_prometheus(urllib.request.urlopen(
+                f"{srv.url}/metrics").read().decode())
+            # Local and pushed series coexist, distinguished by src.
+            assert parsed[("steps", ())] == 2
+            assert parsed[("steps", (("src", "proc1"),))] == 7
+            # A second push from the same source replaces, not appends.
+            worker.counter("steps").inc(1)
+            push_snapshot(srv.url, "proc1", worker)
+            parsed = parse_prometheus(urllib.request.urlopen(
+                f"{srv.url}/metrics").read().decode())
+            assert parsed[("steps", (("src", "proc1"),))] == 8
+            assert srv.sources() == ["proc1"]
+        finally:
+            srv.close()
+
+    def test_bad_push_is_400(self):
+        srv = MetricsServer(Registry()).start()
+        try:
+            req = urllib.request.Request(
+                f"{srv.url}/push", data=b'{"metrics": 3}',
+                headers={"Content-Type": "application/json"})
+            with pytest.raises(urllib.error.HTTPError) as e:
+                urllib.request.urlopen(req)
+            assert e.value.code == 400
+        finally:
+            srv.close()
+
+
+class TestSLOTracker:
+    def test_burn_rate_math(self):
+        reg = Registry()
+        slo = SLOTracker(registry=reg, objective=0.99, window_s=1e6)
+        # 100 requests, 1 violation = exactly the 1% error budget.
+        for i in range(99):
+            assert slo.observe(0.1, 1.0, now=float(i)) == 0.0
+        burn = slo.observe(5.0, 1.0, now=99.0)
+        assert burn == pytest.approx(1.0)
+        assert reg.gauge("slo_burn_rate").value == pytest.approx(1.0)
+        assert reg.counter("slo_violations").value == 1
+        assert reg.gauge("slo_window_requests").value == 100
+
+    def test_no_target_not_observed(self):
+        slo = SLOTracker(objective=0.99)
+        assert slo.observe(10.0, None) is None
+        assert slo.window_counts() == (0, 0)
+
+    def test_window_pruning(self):
+        slo = SLOTracker(objective=0.9, window_s=10.0)
+        slo.observe(5.0, 1.0, now=0.0)       # violation
+        assert slo.observe(0.1, 1.0, now=1.0) > 0
+        # 20s later the violation has aged out of the window.
+        assert slo.observe(0.1, 1.0, now=20.0) == 0.0
+
+    def test_warn_page_edges_and_events(self, tmp_path):
+        from repro.obs import EventSink, read_events
+
+        reg = Registry()
+        sink = EventSink(tmp_path / "ev.jsonl")
+        slo = SLOTracker(registry=reg, objective=0.5, window_s=1e6,
+                         warn_burn=1.0, page_burn=1.9, sink=sink)
+        # Every request violates: burn = 1/(1-0.5) * frac -> 2.0.
+        for i in range(3):
+            slo.observe(9.0, 1.0, now=float(i))
+        sink.close()
+        # Edge-triggered: one warn and one page despite 3 violations.
+        assert reg.counter("slo_warn").value == 1
+        assert reg.counter("slo_page").value == 1
+        levels = [e["level"] for e in read_events(tmp_path / "ev.jsonl")
+                  if e["type"] == "slo"]
+        assert "warn" in levels or "page" in levels
+
+    def test_series_seeded_at_zero(self):
+        reg = Registry()
+        SLOTracker(registry=reg)
+        parsed = parse_prometheus(render_prometheus(reg.snapshot()))
+        assert parsed[("slo_burn_rate", ())] == 0.0
+
+    def test_invalid_params(self):
+        with pytest.raises(ValueError, match="objective"):
+            SLOTracker(objective=1.0)
+        with pytest.raises(ValueError, match="window_s"):
+            SLOTracker(window_s=0)
+
+    def test_scheduler_edf_reports_late_admission(self):
+        class SpySLO:
+            late = []
+
+            def late_admission(self, overdue_s):
+                self.late.append(overdue_s)
+
+        sched = Scheduler(64, policy="edf", slo=SpySLO())
+        req = Request(prompt=[1, 2], max_new_tokens=2,
+                      latency_target_s=1e-9)
+        sched.submit([req])
+        placed = sched.admit([0], lambda slot, r: True)
+        assert placed == [(0, req)]
+        assert len(SpySLO.late) == 1 and SpySLO.late[0] > 0
+
+    def test_scheduler_fifo_does_not_report(self):
+        class SpySLO:
+            late = []
+
+            def late_admission(self, overdue_s):
+                self.late.append(overdue_s)
+
+        sched = Scheduler(64, policy="fifo", slo=SpySLO())
+        req = Request(prompt=[1], max_new_tokens=1,
+                      latency_target_s=1e-9)
+        sched.submit([req])
+        sched.admit([0], lambda slot, r: True)
+        assert SpySLO.late == []
+
+
+def _attrib_events(exec_counts, splits=None, n=256):
+    """site_decl + flushed exec counters + one hot-loop span."""
+    splits = splits or {}
+    events = []
+    for site in exec_counts:
+        events.append({"type": "site_decl", "site": site,
+                       "offloaded": True,
+                       "splits": splits.get(site, 6),
+                       "m": n, "k": n, "n": n, "batch": 1, "mult": 1,
+                       "dtype": "float32"})
+    for site, count in exec_counts.items():
+        events.append({"type": "metric", "kind": "counter",
+                       "name": "site_exec", "labels": {"site": site},
+                       "value": count})
+    events.append({"type": "span", "name": "train_step", "dur": 3e6})
+    return events
+
+
+class TestAttrib:
+    def test_ranking_consistent_with_exec_counts(self):
+        # Identical shapes and splits: attribution order must be the
+        # execution-count order (the acceptance criterion).
+        events = _attrib_events({"dot0": 2, "scan0/dot1": 50,
+                                 "shmap0/dot1": 10})
+        rows = attribution(events)
+        assert [r.site for r in rows] == ["scan0/dot1", "shmap0/dot1",
+                                         "dot0"]
+        assert [r.execs for r in rows] == [50, 10, 2]
+        assert sum(r.wall_share for r in rows) == pytest.approx(1.0)
+        assert sum(r.gemm_share for r in rows) == pytest.approx(1.0)
+        # Measured wall (3s) is fully distributed.
+        assert sum(r.wall_s for r in rows) == pytest.approx(3.0)
+
+    def test_model_costs_scale_with_splits(self):
+        events = _attrib_events({"hi": 10, "lo": 10},
+                                splits={"hi": 8, "lo": 3})
+        rows = attribution(events)
+        hi = next(r for r in rows if r.site == "hi")
+        lo = next(r for r in rows if r.site == "lo")
+        # pairs(8)=36 vs pairs(3)=6 at equal execs.
+        assert hi.int8_gemms == pytest.approx(6 * lo.int8_gemms)
+        assert hi.wall_share > lo.wall_share
+
+    def test_demotion_suggestion(self):
+        events = _attrib_events({"dot0": 4}, splits={"dot0": 6})
+        (row,) = attribution(events)
+        assert row.demote_to == 4
+        # pairs(6)=21 -> pairs(4)=10: saves 11 per problem.
+        assert row.demote_save_gemms == pytest.approx(11 * 4)
+        assert "s=6 -> s=4" in row.suggestion()
+        assert "INT8 GEMMs" in row.suggestion()
+        floor = attribution(_attrib_events({"d": 1},
+                                           splits={"d": 2}))[0]
+        assert floor.demote_to == 1
+
+    def test_publish_gauges(self):
+        reg = Registry()
+        rows = attribution(_attrib_events({"dot0": 5, "dot1": 1}))
+        publish(rows, reg)
+        parsed = parse_prometheus(render_prometheus(reg.snapshot()))
+        key = ("attrib_wall_share", (("site", "dot0"),))
+        assert parsed[key] == pytest.approx(rows[0].wall_share)
+        assert ("attrib_int8_gemms",
+                (("site", "dot1"),)) in parsed
+
+    def test_cli_attrib_on_recorded_run(self, tmp_path):
+        def f(a, b):
+            return jnp.sum(jnp.tanh(a @ b) @ b)
+
+        a = jnp.ones((128, 128), jnp.float32)
+        pol = PrecisionPolicy(backend="fp64_int8", default_splits=4,
+                              min_dim=64)
+        sites = site_report(f, pol)(a, a)
+        run = MetricsRun(tmp_path)
+        run.declare_sites(sites)
+        handler = run.site_event_handler()
+        for s in sites:
+            if s.offloaded:
+                handler({"site": s.name})
+        with run.tracer.span("train_step"):
+            pass
+        run.close()
+        out = io.StringIO()
+        assert obs_main(["attrib", str(tmp_path)], out=out) == 0
+        text = out.getvalue()
+        assert "cost attribution" in text
+        for s in sites:
+            if s.offloaded:
+                assert s.name in text
+        assert "s=4 -> s=2" in text
+
+    def test_cli_attrib_without_decls_fails(self, tmp_path):
+        MetricsRun(tmp_path).close()
+        out = io.StringIO()
+        assert obs_main(["attrib", str(tmp_path)], out=out) == 1
+        assert "no offloaded site_decl" in out.getvalue()
+
+
+def _record_run(tmp_path, name, rows, drift=0):
+    """One recorded metrics run with bench rows (+ numerics events)."""
+    run = MetricsRun(tmp_path / name)
+    for row_name, us, derived in rows:
+        run.event("bench_row", name=row_name, us_per_call=us,
+                  derived=derived, derived_num=parse_derived(derived))
+    run.registry.counter("site_exec", site="dot0").inc(3)
+    for i in range(drift):
+        run.event("numerics", step=i, site="dot0", splits=4,
+                  realized_rel=1e-2, budget=1e-6, drift=True)
+    run.close()
+    return str(tmp_path / name)
+
+
+BASE_ROWS = [("lm_step_native", 100.0, "tiny;tokens=256"),
+             ("kernel_v2_s6_128", 50.0,
+              "hbm_read_reduction=3.50;pairs=21")]
+
+
+class TestDiff:
+    def test_identical_runs_pass(self, tmp_path):
+        a = _record_run(tmp_path, "a", BASE_ROWS)
+        b = _record_run(tmp_path, "b", BASE_ROWS)
+        out = io.StringIO()
+        rc = obs_main(["diff", a, b, "--check", "--max-ratio", "1.5"],
+                      out=out)
+        assert rc == 0
+        assert "CHECK OK" in out.getvalue()
+        assert "no regressions detected" in out.getvalue()
+
+    def test_timing_regression_flagged(self, tmp_path):
+        a = _record_run(tmp_path, "a", BASE_ROWS)
+        slow = [("lm_step_native", 400.0, "tiny;tokens=256"),
+                BASE_ROWS[1]]
+        b = _record_run(tmp_path, "b", slow)
+        out = io.StringIO()
+        # Without --max-ratio the slowdown is reported, not gated.
+        assert obs_main(["diff", a, b, "--check"], out=out) == 0
+        assert "slower in B" in out.getvalue()
+        out = io.StringIO()
+        rc = obs_main(["diff", a, b, "--check", "--max-ratio", "2.0"],
+                      out=out)
+        assert rc == 1
+        assert "slowed 4.00x" in out.getvalue()
+
+    def test_missing_row_and_new_skip(self, tmp_path):
+        a = _record_run(tmp_path, "a", BASE_ROWS)
+        b = _record_run(tmp_path, "b", [
+            ("kernel_v2_s6_128", 0.0,
+             "skipped=ImportError;pairs=21")])
+        out = io.StringIO()
+        assert obs_main(["diff", a, b, "--check"], out=out) == 1
+        text = out.getvalue()
+        assert "'lm_step_native'" in text and "missing" in text
+        assert "skipped" in text
+
+    def test_drift_increase_fails_check(self, tmp_path):
+        a = _record_run(tmp_path, "a", BASE_ROWS, drift=0)
+        b = _record_run(tmp_path, "b", BASE_ROWS, drift=2)
+        out = io.StringIO()
+        assert obs_main(["diff", a, b, "--check"], out=out) == 1
+        assert "drift count" in out.getvalue()
+
+    def test_vanished_counter_fails_check(self, tmp_path):
+        a = _record_run(tmp_path, "a", BASE_ROWS)
+        run = MetricsRun(tmp_path / "b")
+        for row_name, us, derived in BASE_ROWS:
+            run.event("bench_row", name=row_name, us_per_call=us,
+                      derived=derived)
+        run.close()  # no site_exec counter in this run
+        out = io.StringIO()
+        rc = obs_main(["diff", a, str(tmp_path / "b"), "--check"],
+                      out=out)
+        assert rc == 1
+        assert "site_exec" in out.getvalue()
+
+    def test_derived_num_round_trip(self):
+        assert parse_derived(
+            "hbm_read_reduction=3.50;pairs=21;backend=xla_cpu;"
+            "modeled=18.76TFLOPS") == {
+                "hbm_read_reduction": 3.5, "pairs": 21.0,
+                "modeled": 18.76}
+        report = diff_runs(
+            [{"type": "bench_row", "name": "x", "us_per_call": 1.0,
+              "derived": "pairs=21"}],
+            [{"type": "bench_row", "name": "x", "us_per_call": 1.0,
+              "derived": "pairs=10"}])
+        (row,) = report.bench
+        assert row.derived["pairs"] == (21.0, 10.0)
+
+
+SMALL = LMConfig(name="test_obs_live_serve", vocab_size=128,
+                 num_layers=1, d_model=64, num_heads=2, num_kv_heads=1,
+                 head_dim=32, d_ff=128)
+
+
+class TestEngineLiveMetrics:
+    def test_live_engine_serves_metrics(self, tmp_path):
+        """The acceptance criterion: a live serve engine answers
+        ``GET /metrics`` in valid Prometheus text format."""
+        model = Model(SMALL)
+        params = model.init_params(jax.random.PRNGKey(0))
+        run = MetricsRun(tmp_path)
+        eng = Engine(model, params, batch_slots=2, max_len=64,
+                     metrics=run, metrics_port=0,
+                     scheduler_policy="edf")
+        try:
+            url = eng.metrics_server.url
+            # The SLO series exists before any request finishes.
+            parsed = parse_prometheus(urllib.request.urlopen(
+                f"{url}/metrics").read().decode())
+            assert parsed[("slo_burn_rate", ())] == 0.0
+
+            rng = np.random.default_rng(0)
+            reqs = [Request(prompt=[int(t) for t in
+                                    rng.integers(1, 128, 6)],
+                            max_new_tokens=4,
+                            latency_target_s=60.0)
+                    for _ in range(3)]
+            eng.run(reqs)
+            body = urllib.request.urlopen(
+                f"{url}/metrics").read().decode()
+            parsed = parse_prometheus(body)
+            assert parsed[("serve_ttft_s_count", ())] == 3
+            assert parsed[("serve_tokens", ())] == 12
+            assert parsed[("slo_window_requests", ())] == 3
+            # Generous target: no violations, burn stays 0.
+            assert parsed[("slo_burn_rate", ())] == 0.0
+            assert parsed["_types"]["serve_ttft_s"] == "histogram"
+            runs = json.loads(urllib.request.urlopen(
+                f"{url}/runs").read())
+            assert runs["runs"][0]["run_id"] == run.run_id
+        finally:
+            eng.close()
+            run.close()
+        assert eng.metrics_server is None  # close() is idempotent
+        eng.close()
+
+    def test_slo_violation_burns(self, tmp_path):
+        model = Model(SMALL)
+        params = model.init_params(jax.random.PRNGKey(0))
+        run = MetricsRun(tmp_path)
+        eng = Engine(model, params, batch_slots=1, max_len=64,
+                     metrics=run, slo_objective=0.5)
+        eng.run([Request(prompt=[1, 2, 3], max_new_tokens=2,
+                         latency_target_s=1e-9)])
+        run.close()
+        reg = run.registry
+        assert reg.counter("slo_violations").value == 1
+        assert reg.counter("serve_latency_miss").value == 1
+        assert reg.gauge("slo_burn_rate").value == pytest.approx(2.0)
+
+    def test_metrics_port_requires_metrics(self):
+        model = Model(SMALL)
+        params = model.init_params(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="metrics_port"):
+            Engine(model, params, metrics_port=0)
